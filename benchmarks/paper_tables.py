@@ -1,0 +1,208 @@
+"""One benchmark function per paper table/figure (sim mode, deterministic).
+
+Each returns a list of CSV rows: (name, value, derived-annotation).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Job, SchedKernel, Tier, make_policy
+from repro.core.experiment import scenario, run_mix
+from repro.core.workloads import burner, holder, schbench_worker, waiter
+
+from .workloads import DURATION, SCHEDULERS, SLOTS, WARMUP, WORKERS
+
+
+def _wall(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# ------------------------------------------------------------- Fig 1 and 6
+def fig1_fig6_mixed_throughput(short=False):
+    """Figures 1/6: throughput of CPU-bursty and CPU-bound tasks, SOLO vs
+    MIN:MAX vs 50:50, per scheduler."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    for mix in ("solo", "solo_bound", "minmax", "5050"):
+        pols = SCHEDULERS if mix in ("minmax", "5050") else ["ufs", "vdf", "rr"]
+        if mix == "5050":
+            pols = [p for p in pols if p != "idle"]
+        for pol in pols:
+            r, us = _wall(lambda: scenario(pol, mix, n_slots=SLOTS, n=WORKERS,
+                                           duration=dur, warmup=WARMUP))
+            ts, bg = r.thr("ts"), r.thr("bg")
+            rows.append((f"fig6.{mix}.{pol}.bursty_tx_s", us, f"{ts:.1f}"))
+            rows.append((f"fig6.{mix}.{pol}.bound_q_s", us, f"{bg:.2f}"))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig 2
+def fig2_placement(short=False):
+    """Figure 2: per-slot CPU utilization of the CPU-bursty class under
+    MIN:MAX -- EEVDF pile-ups vs UFS even placement."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    for pol in ("vdf", "ufs"):
+        r, us = _wall(lambda: scenario(pol, "minmax", n_slots=SLOTS, n=WORKERS,
+                                       duration=dur, warmup=WARMUP))
+        util = r.metrics.slot_utilization("bursty", SLOTS)
+        peak = max(util) or 1.0
+        norm = ",".join(f"{100*u/peak:.0f}" for u in util)
+        rows.append((f"fig2.{pol}.slot_util_norm", us, norm))
+        rows.append((f"fig2.{pol}.skew", us,
+                     f"{r.metrics.slot_skew('bursty', SLOTS):.2f}"))
+    return rows
+
+
+# ----------------------------------------------------------------- Table 3
+def tab3_latency(short=False):
+    """Table 3: mean and p95 latency of CPU-bursty tasks."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    for mix in ("solo", "minmax", "5050"):
+        for pol in ("vdf", "rr", "ufs"):
+            r, us = _wall(lambda: scenario(pol, mix, n_slots=SLOTS, n=WORKERS,
+                                           duration=dur, warmup=WARMUP))
+            ls = r.lat("ts")
+            rows.append((f"tab3.{mix}.{pol}.mean_ms", us, f"{ls['mean']*1e3:.2f}"))
+            rows.append((f"tab3.{mix}.{pol}.p95_ms", us, f"{ls['p95']*1e3:.2f}"))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig 7
+def fig7_oversubscription(short=False):
+    """Figure 7: TS throughput scaling at 8/16/24 bursty workers vs 8
+    background workers on 8 slots."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    for n_bursty in (8, 16, 24):
+        for pol in ("vdf", "rr", "ufs"):
+            r, us = _wall(lambda: run_mix(pol, n_slots=SLOTS, n_bursty=n_bursty,
+                                          n_bound=8, duration=dur, warmup=WARMUP))
+            rows.append((f"fig7.n{n_bursty}.{pol}.bursty_tx_s", us,
+                         f"{r.thr('ts'):.1f}"))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig 8
+def fig8_weighted_groups(short=False):
+    """Figure 8: 16 CPU-bursty TS workers split into cgroups with weights
+    10k : 6.67k plus 16 CPU-bound BG workers split 3 : 2, on 8 slots
+    (paper section 6.4). TS proportionality shows in throughput (the tier
+    is contention-limited); BG proportionality shows in CPU share (under
+    UFS the background tier only receives slack, 'at the cost of
+    background tasks')."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    for pol in ("vdf", "ufs"):
+        r, us = _wall(lambda: run_mix(
+            pol, n_slots=SLOTS, duration=dur, warmup=WARMUP,
+            bursty_groups=[("ts_w10k", 10_000.0, 16), ("ts_w6.67k", 6_670.0, 16)],
+            bound_groups=[("bg_w3", 3.0, 8), ("bg_w2", 2.0, 8)]))
+        for g in ("ts_w10k", "ts_w6.67k"):
+            rows.append((f"fig8.{pol}.{g}.tx_s", us, f"{r.thr(g):.1f}"))
+        cpu = r.metrics.cpu_by_group
+        for g in ("bg_w3", "bg_w2"):
+            rows.append((f"fig8.{pol}.{g}.cpu_s", us, f"{cpu[g]:.3f}"))
+        ts_ratio = r.thr("ts_w6.67k") / max(r.thr("ts_w10k"), 1e-9)
+        bg_ratio = cpu["bg_w2"] / max(cpu["bg_w3"], 1e-9)
+        rows.append((f"fig8.{pol}.ts_ratio(expect~0.67)", us, f"{ts_ratio:.2f}"))
+        rows.append((f"fig8.{pol}.bg_ratio(expect~0.67)", us, f"{bg_ratio:.2f}"))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig 9
+def fig9_schbench(short=False):
+    """Figure 9: schbench-analogue general workload -- rps and p99.9 wakeup
+    latency, UFS (all tasks background, default weight) vs EEVDF."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    for pol in ("vdf", "ufs"):
+        k = SchedKernel(SLOTS, make_policy(pol))
+        tier = Tier.BACKGROUND if pol == "ufs" else Tier.TIME_SENSITIVE
+        g = k.create_group("work", tier, 100.0)
+        for i in range(4 * SLOTS):
+            k.add_job(Job(g, behavior=schbench_worker(i), kind="schbench"))
+        t0 = time.perf_counter()
+        m = k.run(WARMUP + dur, warmup=WARMUP)
+        us = (time.perf_counter() - t0) * 1e6
+        rps = m.throughput("work")
+        from repro.core.metrics import percentile
+        wake = m.wakeup_latency["work"]
+        p999 = percentile(wake, 99.9) * 1e6
+        rows.append((f"fig9.{pol}.rps", us, f"{rps:.0f}"))
+        rows.append((f"fig9.{pol}.wakeup_p999_us", us, f"{p999:.0f}"))
+    return rows
+
+
+# ----------------------------------------------------------------- Table 4
+def tab4_priority_inversion(short=False):
+    """Table 4: spinlock holder / waiter / burner micro-experiment."""
+    horizon = 200.0 if short else 1500.0
+    compute = 1.0 if short else 3.0
+    rows = []
+
+    def run(pol, with_burner=True, hints=True, label=None):
+        k = SchedKernel(1, make_policy(pol), hints_enabled=hints)
+        ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+        bg = k.create_group("bg", Tier.BACKGROUND, 1)
+        lock = k.create_lock("spin")
+        h = Job(bg, behavior=holder(lock, compute=compute), name="holder")
+        w = Job(ts, behavior=waiter(lock), name="waiter")
+        h.pinned_slot = w.pinned_slot = 0
+        jobs = [h, w]
+        if with_burner:
+            b = Job(ts, behavior=burner(), name="burner")
+            b.pinned_slot = 0
+            jobs.append(b)
+        for j in jobs:
+            k.add_job(j)
+        t0 = time.perf_counter()
+        k.run(horizon)
+        us = (time.perf_counter() - t0) * 1e6
+        name = label or pol
+        hl = k.metrics.request_latency.get("bg", [])
+        wl = k.metrics.request_latency.get("ts", [])
+        wacq = lock.acquired_at.get(w.jid)
+
+        def fmt(v):
+            if v is None:
+                return "PANIC" if k.metrics.panics else "-"
+            return f"{v:.1f}s"
+        rows.append((f"tab4.{name}.holder_total", us, fmt(hl[0] if hl else None)))
+        rows.append((f"tab4.{name}.waiter_acquire", us, fmt(wacq)))
+        rows.append((f"tab4.{name}.waiter_total", us,
+                     fmt(wl[0] + 0.1 if wl else None)))
+
+    run("ufs", with_burner=False, label="baseline")
+    run("vdf", hints=False, label="eevdf")
+    run("fifo", hints=False)
+    run("rr", hints=False)
+    run("ufs", hints=True)
+    run("ufs", hints=False, label="ufs_nohints")
+    return rows
+
+
+# ------------------------------------------------------------ section 6.7
+def sec67_hint_overhead(short=False):
+    """Section 6.7: hinting enabled vs disabled under MIN:MAX -- <=1%."""
+    dur = 8.0 if short else DURATION
+    rows = []
+    thr = {}
+    for hints in (True, False):
+        r, us = _wall(lambda: scenario("ufs", "minmax", n_slots=SLOTS,
+                                       n=WORKERS, duration=dur, warmup=WARMUP,
+                                       hints_enabled=hints))
+        thr[hints] = r.thr("ts")
+        rows.append((f"sec67.hints_{'on' if hints else 'off'}.tx_s", us,
+                     f"{thr[hints]:.1f}"))
+    delta = abs(thr[True] - thr[False]) / max(thr[False], 1e-9)
+    rows.append(("sec67.overhead_pct", 0.0, f"{100*delta:.2f}"))
+    return rows
+
+
+ALL = [fig1_fig6_mixed_throughput, fig2_placement, tab3_latency,
+       fig7_oversubscription, fig8_weighted_groups, fig9_schbench,
+       tab4_priority_inversion, sec67_hint_overhead]

@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+producing run; derived = the paper-comparable metric).
+
+  PYTHONPATH=src python -m benchmarks.run [--short] [--only fig6,tab4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--short", action="store_true",
+                    help="shorter sim windows (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated prefixes (fig6, fig2, tab3, fig7, "
+                         "fig8, fig9, tab4, sec67, fig10)")
+    ap.add_argument("--skip-live", action="store_true",
+                    help="skip the live-JAX fig10 benchmark")
+    args = ap.parse_args()
+
+    from . import paper_tables
+    benches = list(paper_tables.ALL)
+    if not args.skip_live:
+        from . import fig10_ml
+        benches.append(fig10_ml.run)
+
+    only = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    for fn in benches:
+        try:
+            rows = fn(short=args.short)
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            continue
+        for name, us, derived in rows:
+            if only and not any(name.startswith(p) for p in only):
+                continue
+            print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

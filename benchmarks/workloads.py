@@ -1,0 +1,7 @@
+"""Shared benchmark config: paper-matched scenario parameters."""
+DURATION = 20.0      # measurement window (paper: 60s; scaled for CI)
+WARMUP = 5.0         # paper: 60s warm-up
+SLOTS = 8            # paper section 6.1 uses 8 cores
+WORKERS = 8
+
+SCHEDULERS = ["ufs", "vdf", "idle", "fifo", "rr"]

@@ -1,0 +1,40 @@
+"""Priority-inversion demo (Table 4), full matrix: every scheduler, with
+and without application hinting, with per-event trace output.
+
+  PYTHONPATH=src python examples/priority_inversion_demo.py
+"""
+from repro.core import Job, SchedKernel, Tier, make_policy
+from repro.core.workloads import burner, holder, waiter
+
+print(f"{'scheduler':<14} {'holder done':>12} {'waiter lock':>12} "
+      f"{'waiter done':>12}  notes")
+for pol, hints in (("ufs", False), ("vdf", False), ("idle", False),
+                   ("fifo", False), ("rr", False), ("ufs", True)):
+    k = SchedKernel(1, make_policy(pol), hints_enabled=hints)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = k.create_lock("spin")
+    h = Job(bg, behavior=holder(lock, compute=3.0), name="holder")
+    w = Job(ts, behavior=waiter(lock), name="waiter")
+    b = Job(ts, behavior=burner(), name="burner")
+    for j in (h, w, b):
+        j.pinned_slot = 0
+        k.add_job(j)
+    k.run(1500.0)
+    hl = k.metrics.request_latency.get("bg", [])
+    wl = k.metrics.request_latency.get("ts", [])
+    wacq = lock.acquired_at.get(w.jid)
+
+    def f(v):
+        return f"{v:8.1f}s" if v is not None else ("   PANIC" if k.metrics.panics
+                                                   else "   never")
+    notes = []
+    if h.boost_count:
+        notes.append(f"holder boosted {h.boost_count}x")
+    if k.metrics.panics:
+        notes.append("stuck-spinlock watchdog fired")
+    name = pol + ("+hints" if hints else "")
+    print(f"{name:<14} {f(hl[0] if hl else None):>12} {f(wacq):>12} "
+          f"{f(wl[0] + 0.1 if wl else None):>12}  {'; '.join(notes)}")
+print("\npaper Table 4: EEVDF panics; FIFO strands the waiter; RR takes ~71 s;"
+      "\nUFS with hints finishes in ~2x the no-contention baseline.")

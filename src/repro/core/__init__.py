@@ -1,0 +1,27 @@
+"""repro.core -- UFS: the selectively unfair scheduler (the paper's
+contribution), plus the scheduling kernel and baseline policies.
+
+Public surface:
+
+* :class:`SchedKernel`, :class:`Slot`, :class:`SimClock` -- event-driven core
+* :class:`UFSPolicy` and baselines via :func:`make_policy`
+* :class:`Job`, :class:`WorkloadGroup`, :class:`Tier` -- schedulable entities
+* :class:`HintTable` -- application-based scheduler hinting (eBPF-map analogue)
+* workload generators for the paper's experiments
+"""
+from .task import (Job, JobState, Tier, WorkloadGroup, Burst, Block,
+                   RequestBegin, RequestEnd, Exit)
+from .kernel import SchedKernel, Slot, SimClock, Policy, DEFAULT_SLICE
+from .hints import HintTable
+from .locks import SimLock, spin_acquire
+from .metrics import Metrics, percentile
+from .ufs import UFSPolicy
+from .policies import make_policy, POLICIES
+
+__all__ = [
+    "Job", "JobState", "Tier", "WorkloadGroup", "Burst", "Block",
+    "RequestBegin", "RequestEnd", "Exit",
+    "SchedKernel", "Slot", "SimClock", "Policy", "DEFAULT_SLICE",
+    "HintTable", "SimLock", "spin_acquire", "Metrics", "percentile",
+    "UFSPolicy", "make_policy", "POLICIES",
+]

@@ -1,0 +1,79 @@
+"""Dispatch queues (paper section 2, "sched_ext" background).
+
+* :class:`LocalDSQ` -- per-slot run queue holding jobs intended to run on that
+  slot soon; ordered by a policy-provided key (vruntime for UFS, virtual
+  deadline for the VDF baseline, FIFO order for RT baselines).
+* :class:`GroupDSQ` -- custom per-group queue for deferred background
+  dispatch; ordered by task virtual runtime.
+
+Both are small ordered containers with O(log n) insert and O(1)/O(log n) pop;
+``bisect`` on a list is ideal at the queue sizes a slot or group ever holds.
+"""
+from __future__ import annotations
+
+import bisect
+import itertools
+from typing import Optional
+
+from .task import Job
+
+_tie = itertools.count()
+
+
+class _OrderedQueue:
+    def __init__(self) -> None:
+        self._items: list[tuple[float, int, Job]] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def push(self, job: Job, key: float) -> None:
+        bisect.insort(self._items, (key, next(_tie), job))
+
+    def pop_front(self) -> Optional[Job]:
+        if not self._items:
+            return None
+        return self._items.pop(0)[2]
+
+    def peek_front(self) -> Optional[Job]:
+        return self._items[0][2] if self._items else None
+
+    def peek_key(self) -> Optional[float]:
+        return self._items[0][0] if self._items else None
+
+    def pop_back(self) -> Optional[Job]:
+        if not self._items:
+            return None
+        return self._items.pop()[2]
+
+    def pop_first_where(self, pred) -> Optional[Job]:
+        for i, (_, _, j) in enumerate(self._items):
+            if pred(j):
+                del self._items[i]
+                return j
+        return None
+
+    def remove(self, job: Job) -> bool:
+        for i, (_, _, j) in enumerate(self._items):
+            if j is job:
+                del self._items[i]
+                return True
+        return False
+
+    def jobs(self) -> list[Job]:
+        return [j for _, _, j in self._items]
+
+    def total_key_weight(self, keyfn) -> float:
+        return sum(keyfn(j) for _, _, j in self._items)
+
+
+class LocalDSQ(_OrderedQueue):
+    """Per-slot local dispatch queue."""
+
+
+class GroupDSQ(_OrderedQueue):
+    """Per-group custom dispatch queue, ordered by task vruntime: the task at
+    the head has executed the least and runs first (paper section 5.1.3)."""

@@ -1,0 +1,195 @@
+"""Live-mode scheduling kernel: the same Policy objects as the simulator,
+driving real (JAX) work on worker threads.
+
+A *slot* here is a device execution context served by one host thread; jobs
+provide ``run_chunk(budget_s) -> "done" | "blocked" | "yield"`` executing one
+bounded chunk of real work (a training microbatch, a batched decode step, a
+prefill chunk). Preemption is chunk-granular (DESIGN.md section 2): a kick
+sets ``slot.preempt`` which long chunks may poll, and the scheduler simply
+does not re-dispatch background work while time-sensitive work is queued.
+
+Locks: :class:`LiveLock` is the engine-lock analogue of ``SimLock`` -- a
+real ``threading.Lock`` instrumented with HintTable reporting, so the
+priority-inversion machinery (boosting) works identically in live mode.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Callable, Optional
+
+from .hints import HintTable
+from .kernel import Policy, Slot
+from .metrics import Metrics
+from .task import Job, JobState, Tier, WorkloadGroup
+from .dsq import GroupDSQ
+
+_live_ids = itertools.count(1)
+
+
+class LiveJob(Job):
+    def __init__(self, group: WorkloadGroup, run_chunk: Callable[[float], str],
+                 name: str = "", kind: str = "live"):
+        super().__init__(group, behavior=None, name=name or f"live{next(_live_ids)}",
+                         kind=kind)
+        self._run_chunk = run_chunk
+
+
+class LiveKernel:
+    """Thread-based kernel exposing the attribute surface policies use."""
+
+    def __init__(self, n_slots: int, policy: Policy,
+                 hints: Optional[HintTable] = None, hints_enabled: bool = True):
+        self.slots = [Slot(i) for i in range(n_slots)]
+        for s in self.slots:
+            s.preempt = False
+        self.policy = policy
+        self.hints = hints or HintTable()
+        self.hints_enabled = hints_enabled
+        self.metrics = Metrics()
+        self.groups: dict[str, WorkloadGroup] = {}
+        self.kick_latency = 0.0
+        self._t0 = time.monotonic()
+        self._cond = threading.Condition()
+        self._stop = False
+        self._threads: list = []
+        policy.attach(self)
+        self.hints.on_boost = lambda j: self._with_lock(self.policy.on_boost, j)
+        self.hints.on_unboost = lambda j: self._with_lock(self.policy.on_unboost, j)
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    @property
+    def clock(self):  # pragma: no cover - compat shim
+        return self
+
+    def online_slots(self) -> list:
+        return [s for s in self.slots if s.online]
+
+    def create_group(self, name: str, tier: Tier, weight: float = 100.0,
+                     **kw) -> WorkloadGroup:
+        g = WorkloadGroup(name, tier, weight, **kw)
+        g.dsq = GroupDSQ()
+        self.groups[name] = g
+        return g
+
+    def _with_lock(self, fn, *a):
+        # hint callbacks may fire from a thread already holding the lock
+        if self._cond._lock.locked() and threading.current_thread() in self._threads:
+            fn(*a)
+        else:
+            with self._cond:
+                fn(*a)
+                self._cond.notify_all()
+
+    # ------------------------------------------------------------- schedule
+    def wake(self, job: Job) -> None:
+        with self._cond:
+            job.state = JobState.RUNNABLE
+            job.wakeup_time = self.now
+            job.location = None
+            self.policy.enqueue(job, requeue=False)
+            self._cond.notify_all()
+
+    def requeue(self, job: Job) -> None:
+        job.state = JobState.RUNNABLE
+        job.location = None
+        self.policy.enqueue(job, requeue=True)
+
+    def kick(self, slot: Slot, preempt: bool = False) -> None:
+        self.metrics.kicks += 1
+        if preempt and slot.current is not None:
+            self.metrics.preemptions += 1
+            slot.preempt = True
+        self._cond.notify_all()
+
+    # -------------------------------------------------------------- workers
+    def start(self) -> None:
+        for slot in self.slots:
+            t = threading.Thread(target=self._worker, args=(slot,), daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def _worker(self, slot: Slot) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if self._stop:
+                        return
+                    job = self.policy.pick_next(slot)
+                    if job is not None:
+                        break
+                    self._cond.wait(timeout=0.05)
+                job.state = JobState.RUNNING
+                job.location = None
+                if job.wakeup_time >= 0:
+                    self.metrics.record_wakeup(job.group.name,
+                                               self.now - job.wakeup_time, self.now)
+                    job.wakeup_time = -1.0
+                job.prev_slot = slot.sid
+                slot.current = job
+                slot.preempt = False
+                budget = self.policy.task_slice(job)
+            t0 = time.monotonic()
+            try:
+                status = job._run_chunk(budget)       # real work, no lock held
+            except Exception:                         # noqa: BLE001
+                status = "done"
+            used = time.monotonic() - t0
+            with self._cond:
+                slot.current = None
+                self.policy.stopping(job, slot, used)
+                self.metrics.record_run(slot.sid, job.kind, job.group.name,
+                                        used, self.now)
+                if status == "done":
+                    job.state = JobState.EXITED
+                elif status == "blocked":
+                    job.state = JobState.BLOCKED
+                else:
+                    self.requeue(job)
+                self._cond.notify_all()
+
+
+class LiveLock:
+    """Engine lock with hint instrumentation (LWLock analogue, live mode)."""
+
+    _ids = itertools.count(10_000)
+
+    def __init__(self, kernel: LiveKernel, name: str = ""):
+        self.lock_id = next(self._ids)
+        self.name = name or f"livelock{self.lock_id}"
+        self.kernel = kernel
+        self._lock = threading.Lock()
+        self.holder: Optional[Job] = None
+
+    def acquire(self, job: Job, timeout: float = 30.0) -> bool:
+        if not self._lock.acquire(blocking=False):
+            if self.kernel.hints_enabled:
+                self.kernel.hints.report_wait_start(job, self.lock_id)
+            ok = self._lock.acquire(timeout=timeout)
+            if not ok:
+                return False
+        self.holder = job
+        job.held_locks.add(self)
+        if self.kernel.hints_enabled:
+            self.kernel.hints.report_wait_end(job, self.lock_id)
+            self.kernel.hints.report_lock_acquired(job, self.lock_id)
+        return True
+
+    def release(self, job: Job) -> None:
+        self.holder = None
+        job.held_locks.discard(self)
+        if self.kernel.hints_enabled:
+            self.kernel.hints.report_lock_released(job, self.lock_id)
+        self._lock.release()

@@ -1,0 +1,85 @@
+"""Scheduler metrics: throughput, latency percentiles, per-slot utilization.
+
+Per-slot busy time by job kind supports the Figure-2 reconstruction (the
+paper rebuilds per-CPU execution time of CPU-bursty tasks from sched_switch
+traces; we account it directly at charge time).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Optional
+
+
+def percentile(values: list, q: float) -> float:
+    """Nearest-rank percentile on a copy (q in [0,100])."""
+    if not values:
+        return float("nan")
+    s = sorted(values)
+    k = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+class Metrics:
+    def __init__(self) -> None:
+        self.request_latency: dict[str, list] = defaultdict(list)   # group -> latencies
+        self.wakeup_latency: dict[str, list] = defaultdict(list)    # group -> wake->run delays
+        self.completed: dict[str, int] = defaultdict(int)           # group -> finished requests
+        self.cpu_by_group: dict[str, float] = defaultdict(float)    # group -> slot-seconds
+        self.slot_busy: dict = defaultdict(float)                   # (slot, kind) -> busy seconds
+        self.preemptions: int = 0
+        self.kicks: int = 0
+        self.dispatches: int = 0
+        self.lb_migrations: int = 0
+        self.panics: list[str] = []
+        self.window_start: float = 0.0
+        self.window_end: float = 0.0
+
+    # ------------------------------------------------------------------
+    def record_run(self, slot_id: int, kind: str, group: str, dur: float, t: float) -> None:
+        lo = max(self.window_start, t - dur)
+        hi = t if self.window_end == 0.0 else min(t, self.window_end)
+        d = max(0.0, hi - lo)
+        if d <= 0.0:
+            return
+        self.slot_busy[(slot_id, kind)] += d
+        self.cpu_by_group[group] += d
+
+    def record_request(self, group: str, latency: float, t: float) -> None:
+        if t < self.window_start or (self.window_end and t > self.window_end):
+            return
+        self.completed[group] += 1
+        self.request_latency[group].append(latency)
+
+    def record_wakeup(self, group: str, delay: float, t: float) -> None:
+        if t < self.window_start:
+            return
+        self.wakeup_latency[group].append(delay)
+
+    # ------------------------------------------------------------------
+    def throughput(self, group: str, duration: Optional[float] = None) -> float:
+        dur = duration or (self.window_end - self.window_start)
+        return self.completed[group] / dur if dur > 0 else 0.0
+
+    def latency_stats(self, group: str) -> dict:
+        lat = self.request_latency[group]
+        if not lat:
+            return {"mean": float("nan"), "p50": float("nan"), "p95": float("nan"),
+                    "p99": float("nan"), "p999": float("nan"), "n": 0}
+        return {
+            "mean": sum(lat) / len(lat),
+            "p50": percentile(lat, 50),
+            "p95": percentile(lat, 95),
+            "p99": percentile(lat, 99),
+            "p999": percentile(lat, 99.9),
+            "n": len(lat),
+        }
+
+    def slot_utilization(self, kind: str, n_slots: int) -> list:
+        """Per-slot busy seconds for jobs of ``kind`` (Figure 2)."""
+        return [self.slot_busy.get((s, kind), 0.0) for s in range(n_slots)]
+
+    def slot_skew(self, kind: str, n_slots: int) -> float:
+        """max/mean utilization ratio across slots -- 1.0 means perfectly even."""
+        u = self.slot_utilization(kind, n_slots)
+        mean = sum(u) / len(u) if u else 0.0
+        return (max(u) / mean) if mean > 0 else float("nan")

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots, each with a
+jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+* flash_attention  -- train/prefill attention, O(seq) memory
+* decode_attention -- single-token attention over long KV caches (serving)
+* mlstm_scan       -- chunkwise-parallel mLSTM / SSD linear attention
+* moe_topk         -- fused MoE router (softmax + top-k + renormalize)
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

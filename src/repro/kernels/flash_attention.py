@@ -1,0 +1,118 @@
+"""Flash attention forward -- Pallas TPU kernel.
+
+Online-softmax attention with O(seq) memory: grid (batch*heads, q_blocks,
+kv_blocks), kv innermost so the VMEM scratch (acc, running max m, running
+sum l) carries across kv steps for one q block. Causal and sliding-window
+masking are predicated per block; fully-masked blocks are skipped with
+``pl.when`` (no MXU work issued).
+
+BlockSpec tiling targets TPU v5e: block sizes are multiples of 128 on both
+the q and kv axes (MXU/lane alignment), fp32 scratch, bf16-friendly inputs.
+VMEM working set per program ~= (bq + 2*bk) * head_dim * 2B + bq*bk*4B
+(about 1.3 MB at bq=bk=512, hd=128), comfortably under the ~16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, nk: int, offs: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # When sq != sk the q tokens are the LAST sq positions of the kv space
+    # (decode-continuation convention, same as ops._flash_xla / ref).
+    q_start = iq * bq + offs
+    k_start = ik * bk
+
+    # Block-level reachability: skip fully-masked kv blocks.
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window > 0:
+        # kv block must overlap [q_pos - window + 1, q_pos] for some q in block
+        reachable = jnp.logical_and(reachable,
+                                    k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = q @ k.T                                       # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False):
+    """q: (BH, Sq, D); k, v: (BH, Sk, D). Returns (BH, Sq, D).
+
+    Head grouping (GQA) is resolved by the caller (ops.py) by expanding /
+    reindexing KV heads into the BH axis.
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = scale if scale is not None else d ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, offs=(sk - sq if causal else 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

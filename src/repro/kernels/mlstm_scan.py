@@ -1,0 +1,103 @@
+"""Chunkwise-parallel mLSTM (matrix-memory linear attention) -- Pallas TPU.
+
+The xLSTM/hymba recurrence
+    C_t = f_t * C_{t-1} + i_t * k_t v_t^T        (matrix memory, D x D)
+    n_t = f_t * n_{t-1} + i_t * k_t              (normalizer)
+    h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+is evaluated chunk-parallel: within a chunk of length L the contribution is
+a masked, decay-weighted attention matrix (intra), plus the carried state
+applied with cumulative decay (inter). The grid is (batch*heads, chunks)
+with chunks innermost-sequential; C and n live in VMEM scratch across chunk
+steps -- the TPU-native replacement for a per-timestep recurrence, giving
+MXU-shaped (L x D) matmuls instead of D-wide vector ops.
+
+Gates use log-sigmoid decay accumulated in log space for stability
+(sigmoid-gated linear-attention form; see DESIGN.md section 8 for the
+deviation from the exp-gate + stabilizer formulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, logf_ref, i_ref, o_ref, c_ref, n_ref,
+                  *, chunk: int, scale: float):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (L, d)
+    k = k_ref[0].astype(jnp.float32)              # (L, d)
+    v = v_ref[0].astype(jnp.float32)              # (L, d)
+    logf = logf_ref[0].astype(jnp.float32)        # (L,)
+    ig = i_ref[0].astype(jnp.float32)             # (L,)
+
+    la = jnp.cumsum(logf)                         # cumulative log-decay
+    total = la[-1]
+    decay_in = jnp.exp(la)                        # state-decay seen by step t
+
+    # inter-chunk: carried state applied with per-step decay
+    c_prev = c_ref[...]
+    n_prev = n_ref[...]
+    inter = (q * decay_in[:, None]) @ c_prev                      # (L, d)
+    n_inter = (q * decay_in[:, None]) @ n_prev[:, None]           # (L, 1)
+
+    # intra-chunk: pairwise decay D_ij = exp(la_i - la_j) * i_j, j <= t
+    li = la[:, None] - la[None, :]                                # (L, L)
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dmat = jnp.where(jpos <= tpos, jnp.exp(li) * ig[None, :], 0.0)
+    s = (q @ k.T) * dmat                                          # (L, L)
+    intra = s @ v                                                 # (L, d)
+
+    num = inter + intra
+    # normalizer: |q . n_t| with n_t = decayed carry + intra-chunk sum
+    den = jnp.abs(n_inter[:, 0] + jnp.sum(s, axis=-1))
+    o_ref[0] = (num / jnp.maximum(den, 1.0)[:, None]).astype(o_ref.dtype)
+
+    # carry updates
+    w = ig * jnp.exp(total - la)                                  # (L,)
+    c_ref[...] = jnp.exp(total) * c_ref[...] + (k * w[:, None]).T @ v
+    n_ref[...] = jnp.exp(total) * n_ref[...] + w @ k
+
+
+def mlstm_scan_pallas(q, k, v, logf, i, *, chunk: int = 256,
+                      scale: float | None = None, interpret: bool = False):
+    """q, k: (BH, S, Dk); v: (BH, S, Dv); logf, i: (BH, S).
+
+    Returns h: (BH, S, Dv). Dk == Dv for xLSTM's mLSTM; Dk = ssm_state for
+    mamba-2/SSD-style heads (hymba), where k/q are the B/C projections.
+    """
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    ch = min(chunk, s)
+    assert s % ch == 0
+    nc = s // ch
+    scale = scale if scale is not None else dk ** -0.5
+    kernel = functools.partial(_mlstm_kernel, chunk=ch, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, ch, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, ch, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, ch, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, ch), lambda b, c: (b, c)),
+            pl.BlockSpec((1, ch), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((dk,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, logf, i)

@@ -1,0 +1,66 @@
+"""Fused MoE router: softmax + top-k + renormalize -- Pallas TPU kernel.
+
+The routing hot spot at the front of every MoE layer: for each token,
+softmax over expert logits, select the top-k experts, renormalize the
+selected probabilities. Fused in one VMEM pass over a token block (the XLA
+decomposition materializes the full softmax plus two sorts in HBM).
+
+Iterative masked-argmax (k <= 8 passes) instead of a sort: O(k*E) VPU work,
+no cross-lane sort network.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _router_kernel(logits_ref, w_ref, idx_ref, *, top_k: int, n_valid: int):
+    logits = logits_ref[...].astype(jnp.float32)          # (bt, E)
+    bt, e = logits.shape
+    eidx = jax.lax.broadcasted_iota(jnp.int32, (bt, e), 1)
+    logits = jnp.where(eidx < n_valid, logits, NEG_INF)   # mask padding experts
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    masked = probs
+    total = jnp.zeros((bt,), jnp.float32)
+    for j in range(top_k):                                # bounded unrolled loop
+        best = jnp.argmax(masked, axis=-1)                # (bt,)
+        bestp = jnp.max(masked, axis=-1)
+        idx_ref[:, j] = best.astype(jnp.int32)
+        w_ref[:, j] = bestp
+        total = total + bestp
+        masked = jnp.where(eidx == best[:, None], NEG_INF, masked)
+    w_ref[...] = (w_ref[...] / jnp.maximum(total, 1e-9)[:, None]).astype(w_ref.dtype)
+
+
+def moe_topk_pallas(logits, top_k: int, n_valid: int | None = None,
+                    block_t: int = 1024, interpret: bool = False):
+    """logits: (T, E) -> (weights (T, k) f32, indices (T, k) i32).
+
+    ``n_valid`` masks padded experts (EP divisibility padding) out of the
+    softmax and the selection.
+    """
+    t, e = logits.shape
+    bt = min(block_t, t)
+    assert t % bt == 0
+    n_valid = n_valid if n_valid is not None else e
+    kernel = functools.partial(_router_kernel, top_k=top_k, n_valid=n_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((t, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """Dense softmax attention. q: (BH, Sq, D); k, v: (BH, Sk, D)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq if causal else 0)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: float | None = None):
+    """q: (BH, 1, D); k, v: (BH, S, D); lengths: (BH,)."""
+    bh, _, d = q.shape
+    s = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale          # (BH,1,S)
+    kpos = jnp.arange(s)[None, None, :]
+    scores = jnp.where(kpos < lengths[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mlstm_scan_ref(q, k, v, logf, i, *, scale: float | None = None):
+    """Step-by-step mLSTM recurrence (the ground truth the chunkwise kernel
+    must match). q, k: (BH, S, Dk); v: (BH, S, Dv); logf, i: (BH, S)."""
+    bh, s, d = q.shape
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    f = jnp.exp(logf.astype(jnp.float32))
+    ig = i.astype(jnp.float32)
+
+    def step(carry, xs):
+        c, n = carry                                  # (BH,D,D), (BH,D)
+        qt, kt, vt, ft, it = xs
+        c = ft[:, None, None] * c + it[:, None, None] * jnp.einsum("bd,be->bde", kt, vt)
+        n = ft[:, None] * n + it[:, None] * kt
+        num = jnp.einsum("bd,bde->be", qt, c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bd,bd->b", qt, n)), 1.0)
+        return (c, n), num / den[:, None]
+
+    xs = (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+          jnp.moveaxis(f, 1, 0), jnp.moveaxis(ig, 1, 0))
+    init = (jnp.zeros((bh, d, dv), jnp.float32), jnp.zeros((bh, d), jnp.float32))
+    _, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype)
+
+
+def moe_topk_ref(logits, top_k: int, n_valid: int | None = None):
+    """Softmax -> top-k -> renormalize. logits: (T, E)."""
+    t, e = logits.shape
+    n_valid = n_valid if n_valid is not None else e
+    masked = jnp.where(jnp.arange(e)[None, :] < n_valid,
+                       logits.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(masked, axis=-1)
+    topw, topi = jax.lax.top_k(probs, top_k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    return topw, topi.astype(jnp.int32)

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell against the production mesh; record memory analysis, cost
+analysis and the collective schedule for the roofline (EXPERIMENTS.md).
+
+The two lines above MUST stay first: JAX locks the device count on first
+initialization, and the production meshes need 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, all_archs, get_arch
+from ..distributed import sharding
+from ..launch import specs as S
+from ..launch.mesh import make_production_mesh
+from ..models.transformer import Model
+from ..roofline import analysis as RA
+from ..training import optimizer as opt
+from ..training import trainer as T
+
+DEFAULT_OUT = "results/dryrun.json"
+
+
+def _train_cfg(arch_cfg, shape, mesh, unroll: bool) -> T.TrainConfig:
+    """Production config uses grad_accum=8 (microbatches bound activation
+    memory); the unrolled roofline cells use accum=1 so XLA cost analysis
+    sees the whole step (a grad-accum scan body is costed once) -- remat
+    keeps the lowering activation-bounded either way."""
+    if unroll:
+        return T.TrainConfig(grad_accum=1,
+                             opt=opt.OptimizerConfig(state_dtype="bfloat16"))
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    per_shard = max(shape.global_batch // dp, 1)
+    accum = min(8, per_shard)
+    while per_shard % accum:
+        accum -= 1
+    return T.TrainConfig(grad_accum=accum,
+                         opt=opt.OptimizerConfig(state_dtype="bfloat16"))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             unroll: bool = True, variant: dict | None = None) -> dict:
+    """variant: perf-iteration knobs (EXPERIMENTS.md section Perf):
+    * kv_quant: int8 KV cache (+per-token-head scales)
+    * act_spec: PartitionSpec tuple for activation constraints at blocks
+    * ep: True -> expert-parallel sharding (expert axis over model)
+    * compress: error-feedback int8 gradient compression in the train step
+    """
+    variant = variant or {}
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    act_constraint = None
+    if variant.get("act_spec") is not None:
+        act_constraint = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(*variant["act_spec"]))
+    # unroll=True applies scanned layers one by one so XLA cost analysis
+    # counts every layer (while bodies are costed once, not x trip-count);
+    # used for the single-pod roofline cells. Multi-pod validation cells
+    # compile the production scan form.
+    model = Model(cfg, unroll=unroll, kv_quant=variant.get("kv_quant", False),
+                  act_constraint=act_constraint)
+    if variant.get("shardmap_attn"):
+        from ..distributed.shardmap_attention import make_shardmap_gqa
+        model.shardmap_attn = make_shardmap_gqa(mesh, cfg)
+    if variant.get("attn_layout"):
+        model.attn_layout_constraint = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                tuple(a for a in ("data", "model") if a in mesh.axis_names),
+                None, None))
+    if variant.get("kv_local_update"):
+        model.kv_update_constraint = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+                None,
+                "model" if cfg.n_kv_heads % mesh.shape["model"] == 0 else None,
+                None))
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    n_params = RA.count_params(params_shapes)
+    p_shard = sharding.params_shardings(params_shapes, mesh,
+                                        ep=variant.get("ep", False))
+
+    kind, inputs = S.input_specs(cfg, shape, model)
+
+    if kind == "train":
+        tcfg = _train_cfg(cfg, shape, mesh, unroll)
+        if variant.get("compress"):
+            tcfg = T.TrainConfig(grad_accum=tcfg.grad_accum,
+                                 compress_grads=True, opt=tcfg.opt)
+        state_shapes = {
+            "params": params_shapes,
+            "opt": jax.eval_shape(lambda p: opt.init_state(tcfg.opt, p),
+                                  params_shapes),
+        }
+        state_shard = {
+            "params": p_shard,
+            "opt": sharding.params_shardings(state_shapes["opt"], mesh),
+        }
+        if tcfg.compress_grads:
+            from ..training import grad_compress
+            state_shapes["ef"] = jax.eval_shape(
+                grad_compress.init_error_state, params_shapes)
+            state_shard["ef"] = sharding.params_shardings(state_shapes["ef"], mesh)
+        batch_shard = sharding.batch_shardings(inputs[0], mesh)
+        step = T.make_train_step(model, tcfg)
+        jitted = jax.jit(step, in_shardings=(state_shard, batch_shard),
+                         out_shardings=(state_shard, None))
+        lowered = jitted.lower(state_shapes, inputs[0])
+    elif kind == "prefill":
+        batch_shard = sharding.batch_shardings(inputs[0], mesh)
+        cache_spec_tree = model.cache_pspecs(mesh, shape.global_batch, shape.seq_len)
+        cache_shard = jax.tree.map(
+            lambda ps: jax.sharding.NamedSharding(mesh, ps), cache_spec_tree,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+        jitted = jax.jit(prefill_step, in_shardings=(p_shard, batch_shard),
+                         out_shardings=(None, cache_shard))
+        lowered = jitted.lower(params_shapes, inputs[0])
+    else:  # decode
+        caches, token = inputs
+        cache_spec_tree = model.cache_pspecs(mesh, shape.global_batch, shape.seq_len)
+        cache_shard = jax.tree.map(
+            lambda ps: jax.sharding.NamedSharding(mesh, ps), cache_spec_tree,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        tok_shard = sharding.batch_shardings({"t": token}, mesh)["t"]
+
+        def serve_step(params, caches, token, pos):
+            return model.decode_step(params, caches, token, pos)
+        jitted = jax.jit(serve_step,
+                         in_shardings=(p_shard, cache_shard, tok_shard, None),
+                         out_shardings=(None, cache_shard))
+        lowered = jitted.lower(params_shapes, caches, token,
+                               S.sds((), jnp.int32))
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    # skip expensive LLVM passes: we need the optimized+partitioned HLO for
+    # cost/memory/collective analysis, not fast host code.
+    compiled = lowered.compile({"xla_backend_optimization_level": 0,
+                                "xla_llvm_disable_expensive_passes": True})
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_info = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                              getattr(mem, "temp_size_in_bytes", 0)),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    mflops = RA.model_flops(cfg, shape, n_params, n_dev)
+    roof = RA.analyze(compiled, mflops)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "kind": kind,
+        "n_params": n_params, "unrolled": unroll,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_info,
+        "roofline": roof.to_dict(),
+        "status": "ok",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="both")
+    ap.add_argument("--unroll", choices=["yes", "no"], default=None,
+                    help="default: yes for single-pod (roofline), no for multi-pod")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    if args.all:
+        cells = []
+        for arch in all_archs():
+            cfg = get_arch(arch)
+            for sname in SHAPES:
+                if sname == "long_500k" and not cfg.is_subquadratic():
+                    continue
+                cells.append((arch, sname))
+        # smallest models first so most cells land early
+        cells.sort(key=lambda c: get_arch(c[0]).d_model * get_arch(c[0]).n_layers)
+    else:
+        cells = [(args.arch, args.shape)]
+
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    for arch, sname in cells:
+        for mp in pods:
+            key = f"{arch}|{sname}|{'2x16x16' if mp else '16x16'}"
+            if args.skip_existing and results.get(key, {}).get("status") == "ok":
+                print(f"[skip] {key}")
+                continue
+            print(f"[cell] {key} ...", flush=True)
+            t0 = time.time()
+            unroll = (not mp) if args.unroll is None else (args.unroll == "yes")
+            try:
+                res = run_cell(arch, sname, mp, unroll=unroll)
+                r = res["roofline"]
+                print(f"  ok in {time.time()-t0:.0f}s  "
+                      f"compute={r['t_compute']*1e3:.2f}ms "
+                      f"memory={r['t_memory']*1e3:.2f}ms "
+                      f"coll={r['t_collective']*1e3:.2f}ms "
+                      f"bottleneck={r['bottleneck']} "
+                      f"useful={r['useful_flops_ratio']:.2f}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                res = {"arch": arch, "shape": sname,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+            results[key] = res
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    print(f"done: {n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell --
+weak-type-correct, shardable, zero allocation.
+
+``input_specs(cfg, shape)`` returns (step_kind, example_inputs) where the
+inputs are ShapeDtypeStructs matching what the corresponding step function
+consumes:
+
+* train   : {"tokens", "labels" [, "frames" | "vision_embeds"]}
+* prefill : {"tokens" [, frontend embeddings]}
+* decode  : (caches, token, pos) -- caches via jax.eval_shape on init_cache
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.transformer import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        batch["frames"] = sds((b, cfg.encoder_len, cfg.d_model), cfg.dtype)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def cache_specs(model: Model, batch_size: int, smax: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch_size, smax))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, model: Model):
+    if shape.kind == "train":
+        return "train", (batch_specs(cfg, shape, with_labels=True),)
+    if shape.kind == "prefill":
+        return "prefill", (batch_specs(cfg, shape, with_labels=False),)
+    if shape.kind == "decode":
+        caches = cache_specs(model, shape.global_batch, shape.seq_len)
+        token = sds((shape.global_batch, 1), jnp.int32)
+        return "decode", (caches, token)
+    raise ValueError(shape.kind)

@@ -1,0 +1,97 @@
+"""Mixture-of-experts FFN: shared + routed experts, top-k gating, capacity
+dispatch (sort + scatter; honest top-k FLOPs, no dense all-expert compute).
+
+Sharding strategies (distributed/sharding.py picks per mesh):
+* "expert-TP": expert FF dims sharded over the model axis (default; clean
+  GSPMD einsums);
+* "EP": the expert axis sharded over the model axis -- the (E, C, d)
+  dispatch buffer reshards token->expert, which GSPMD lowers to the
+  all-to-all pair; this is the beyond-paper hillclimb lever for DeepSeek.
+
+Router uses the fused kernel (kernels/moe_topk) on TPU, jnp elsewhere.
+Padding experts (EP divisibility, e.g. qwen2-moe 60 -> 64) are masked out
+of the softmax and never receive tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import layers as L
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    e = m.routed_total()
+    ks = jax.random.split(key, 5)
+    d, f = cfg.d_model, m.expert_ff
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.dtype(cfg.dtype)) * 0.02},
+        "experts": {
+            "gate": jax.random.normal(ks[1], (e, d, f), jnp.dtype(cfg.dtype)) * scale,
+            "up": jax.random.normal(ks[2], (e, d, f), jnp.dtype(cfg.dtype)) * scale,
+            "down": jax.random.normal(ks[3], (e, f, d), jnp.dtype(cfg.dtype)) * (1.0 / jnp.sqrt(f)),
+        },
+    }
+    if m.n_shared > 0:
+        p["shared"] = L.swiglu_init(ks[4], d, m.n_shared * f, cfg.dtype)
+    return p
+
+
+def moe_forward(cfg, p, x, *, capacity_factor: float = 1.25,
+                backend: str | None = None):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = m.routed_total()
+    xf = x.reshape(t, d)
+
+    logits = xf @ p["router"]["w"].astype(xf.dtype)                  # (T, E)
+    weights, idx = ops.moe_topk(logits, m.top_k, n_valid=m.n_routed,
+                                backend=backend)                     # (T,k)
+    weights = weights * m.router_scale
+
+    # load-balance aux loss (Switch-style) over the valid experts
+    probs = jax.nn.softmax(
+        jnp.where(jnp.arange(e)[None, :] < m.n_routed,
+                  logits.astype(jnp.float32), -1e30), axis=-1)
+    me = jnp.mean(probs, axis=0)                                     # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = m.n_routed * jnp.sum(me * ce)
+
+    # ---- capacity dispatch: sort tokens by expert, scatter to (E, C, d)
+    cap = int(max(1, round(t * m.top_k * capacity_factor / e)))
+    flat_eid = idx.reshape(-1)                                       # (T*k,)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), m.top_k)
+    order = jnp.argsort(flat_eid)
+    eid_s = flat_eid[order]
+    tok_s = flat_tok[order]
+    w_s = flat_w[order]
+    # position of each routed token within its expert's block
+    group_sizes = jnp.bincount(eid_s, length=e)
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    pos_s = jnp.arange(t * m.top_k) - starts[eid_s]
+    keep = pos_s < cap                                               # drop overflow
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[eid_s, jnp.where(keep, pos_s, 0)].add(
+        jnp.where(keep[:, None], xf[tok_s], 0.0))
+
+    # ---- expert compute (E, C, d) -> (E, C, d); honest top-k FLOPs
+    w_exp = p["experts"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_exp["gate"].astype(buf.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, w_exp["up"].astype(buf.dtype))
+    yexp = jnp.einsum("ecf,efd->ecd", h, w_exp["down"].astype(buf.dtype))
+
+    # ---- combine back, weighted
+    gathered = yexp[eid_s, jnp.where(keep, pos_s, 0)]                # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0) * w_s[:, None].astype(xf.dtype)
+    y = jnp.zeros_like(xf).at[tok_s].add(gathered)
+
+    if "shared" in p:
+        y = y + L.swiglu(p["shared"], xf)
+    return y.reshape(b, s, d), aux

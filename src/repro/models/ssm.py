@@ -1,0 +1,225 @@
+"""SSM mixers: xLSTM (mLSTM matrix memory + sLSTM scalar memory) and
+mamba-2/SSD-style heads (hymba's parallel SSM path).
+
+All sequence mixing runs through the chunkwise-parallel linear-attention
+machinery (kernels/mlstm_scan): constant-size recurrent state, O(S) time,
+MXU-shaped chunk matmuls -- the TPU-native formulation of both mLSTM and
+SSD (DESIGN.md section 8). The sLSTM path is a per-channel linear
+recurrence evaluated with an associative scan (no head-recurrent gate
+connections -- simplification recorded in DESIGN.md).
+
+Decode state conventions (per layer):
+* mLSTM / SSD : {"c": (B, H, dk, dv) f32, "n": (B, H, dk) f32}
+* sLSTM       : {"c": (B, d) f32, "n": (B, d) f32}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    di = cfg.ssm.expand * d
+    hd = di // h
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": L.linear_init(ks[0], d, di, cfg.dtype),
+        "wk": L.linear_init(ks[1], d, di, cfg.dtype),
+        "wv": L.linear_init(ks[2], d, di, cfg.dtype),
+        "wi": L.linear_init(ks[3], d, h, cfg.dtype, bias=True),
+        "wf": L.linear_init(ks[4], d, h, cfg.dtype, bias=True),
+        "wo": L.linear_init(ks[5], di, d, cfg.dtype),
+        "gate": L.linear_init(ks[6], d, di, cfg.dtype),
+        "norm": L.rmsnorm_init(hd, cfg.dtype),
+    }
+
+
+def _mlstm_qkv(cfg, p, x):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = cfg.ssm.expand * d
+    hd = di // h
+    q = L.linear(p["wq"], x).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = L.linear(p["wk"], x).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = L.linear(p["wv"], x).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    logf = jax.nn.log_sigmoid(L.linear(p["wf"], x).astype(jnp.float32) + 2.0) \
+        .transpose(0, 2, 1)                                   # (B,H,S)
+    ig = jax.nn.sigmoid(L.linear(p["wi"], x).astype(jnp.float32)).transpose(0, 2, 1)
+    return q, k, v, logf, ig, (b, s, h, hd, di)
+
+
+def mlstm_forward(cfg, p, x, *, backend=None, return_state=False):
+    q, k, v, logf, ig, (b, s, h, hd, di) = _mlstm_qkv(cfg, p, x)
+    hseq = ops.mlstm_scan(q.reshape(b * h, s, hd), k.reshape(b * h, s, hd),
+                          v.reshape(b * h, s, hd), logf.reshape(b * h, s),
+                          ig.reshape(b * h, s), backend=backend)
+    hseq = hseq.reshape(b, h, s, hd)
+    hseq = L.rmsnorm(p["norm"], hseq).transpose(0, 2, 1, 3).reshape(b, s, di)
+    y = L.linear(p["wo"], hseq * jax.nn.silu(L.linear(p["gate"], x)))
+    if return_state:
+        state = _mlstm_final_state(q, k, v, logf, ig)
+        return y, state
+    return y
+
+
+def _mlstm_final_state(q, k, v, logf, ig):
+    """Recompute the final (C, n) carry for decode continuation."""
+    b, h, s, hd = k.shape
+    la = jnp.cumsum(logf, axis=-1)                        # (B,H,S)
+    total = la[..., -1:]
+    w = ig * jnp.exp(total - la)                          # (B,H,S)
+    c = jnp.einsum("bhs,bhsd,bhse->bhde", w, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bhs,bhsd->bhd", w, k.astype(jnp.float32))
+    c = jnp.exp(total)[..., None] * 0.0 + c               # no initial state
+    return {"c": c, "n": n}
+
+
+def mlstm_decode(cfg, p, x, state):
+    """Single-step recurrence. x: (B,1,d)."""
+    q, k, v, logf, ig, (b, s, h, hd, di) = _mlstm_qkv(cfg, p, x)
+    qt = q[:, :, 0].astype(jnp.float32) * (hd ** -0.5)    # (B,H,hd)
+    kt = k[:, :, 0].astype(jnp.float32)
+    vt = v[:, :, 0].astype(jnp.float32)
+    f = jnp.exp(logf[..., 0])                             # (B,H)
+    it = ig[..., 0]
+    c = f[..., None, None] * state["c"] + it[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kt, vt)
+    n = f[..., None] * state["n"] + it[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), 1.0)
+    hvec = (num / den[..., None]).astype(x.dtype)         # (B,H,hd)
+    hvec = L.rmsnorm(p["norm"], hvec).reshape(b, 1, di)
+    y = L.linear(p["wo"], hvec * jax.nn.silu(L.linear(p["gate"], x)))
+    return y, {"c": c, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# SSD / mamba-2 heads (hymba parallel path)
+# ---------------------------------------------------------------------------
+
+def ssd_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    n = cfg.ssm.state_dim
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wv": L.linear_init(ks[0], d, h * hd, cfg.dtype),      # u (value path)
+        "wb": L.linear_init(ks[1], d, h * n, cfg.dtype),       # B (k analogue)
+        "wc": L.linear_init(ks[2], d, h * n, cfg.dtype),       # C (q analogue)
+        "wdt": L.linear_init(ks[3], d, h, cfg.dtype, bias=True),
+        "wo": L.linear_init(ks[4], h * hd, d, cfg.dtype),
+        "gate": L.linear_init(ks[5], d, h * hd, cfg.dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),                 # per-head decay rate
+    }
+
+
+def _ssd_proj(cfg, p, x):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    n = cfg.ssm.state_dim
+    hd = cfg.hd
+    v = L.linear(p["wv"], x).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    kb = L.linear(p["wb"], x).reshape(b, s, h, n).transpose(0, 2, 1, 3)
+    qc = L.linear(p["wc"], x).reshape(b, s, h, n).transpose(0, 2, 1, 3)
+    dt = jax.nn.softplus(L.linear(p["wdt"], x).astype(jnp.float32)).transpose(0, 2, 1)
+    a = -jnp.exp(p["a_log"])[None, :, None]                    # (1,H,1) < 0
+    logf = a * dt                                              # (B,H,S) log decay
+    ig = dt                                                    # input weight
+    return qc, kb, v, logf, ig, (b, s, h, n, hd)
+
+
+def ssd_forward(cfg, p, x, *, backend=None, return_state=False):
+    qc, kb, v, logf, ig, (b, s, h, n, hd) = _ssd_proj(cfg, p, x)
+    hseq = ops.mlstm_scan(qc.reshape(b * h, s, n), kb.reshape(b * h, s, n),
+                          v.reshape(b * h, s, hd), logf.reshape(b * h, s),
+                          ig.reshape(b * h, s), backend=backend, scale=1.0)
+    hseq = hseq.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    y = L.linear(p["wo"], hseq * jax.nn.silu(L.linear(p["gate"], x)))
+    if return_state:
+        la = jnp.cumsum(logf, axis=-1)
+        total = la[..., -1:]
+        w = ig * jnp.exp(total - la)
+        c = jnp.einsum("bhs,bhsd,bhse->bhde", w, kb.astype(jnp.float32),
+                       v.astype(jnp.float32))
+        nn = jnp.einsum("bhs,bhsd->bhd", w, kb.astype(jnp.float32))
+        return y, {"c": c, "n": nn}
+    return y
+
+
+def ssd_decode(cfg, p, x, state):
+    qc, kb, v, logf, ig, (b, s, h, n, hd) = _ssd_proj(cfg, p, x)
+    qt = qc[:, :, 0].astype(jnp.float32)
+    kt = kb[:, :, 0].astype(jnp.float32)
+    vt = v[:, :, 0].astype(jnp.float32)
+    f = jnp.exp(logf[..., 0])
+    it = ig[..., 0]
+    c = f[..., None, None] * state["c"] + it[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kt, vt)
+    nn = f[..., None] * state["n"] + it[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, nn)), 1.0)
+    hvec = (num / den[..., None]).astype(x.dtype).reshape(b, 1, h * hd)
+    y = L.linear(p["wo"], hvec * jax.nn.silu(L.linear(p["gate"], x)))
+    return y, {"c": c, "n": nn}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM scalar memory)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "wz": L.linear_init(ks[0], d, d, cfg.dtype, bias=True),
+        "wi": L.linear_init(ks[1], d, d, cfg.dtype, bias=True),
+        "wf": L.linear_init(ks[2], d, d, cfg.dtype, bias=True),
+        "wout": L.linear_init(ks[3], d, d, cfg.dtype, bias=True),
+        "proj": L.linear_init(ks[4], d, d, cfg.dtype),
+    }
+
+
+def _slstm_gates(p, x):
+    z = jnp.tanh(L.linear(p["wz"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["wi"], x).astype(jnp.float32))
+    f = jax.nn.sigmoid(L.linear(p["wf"], x).astype(jnp.float32) + 2.0)
+    o = jax.nn.sigmoid(L.linear(p["wout"], x).astype(jnp.float32))
+    return z, i, f, o
+
+
+def slstm_forward(cfg, p, x, *, return_state=False):
+    """Per-channel linear recurrence c_t = f c + i z, n_t = f n + i,
+    h = o * c/n -- associative scan over time."""
+    z, i, f, o = _slstm_gates(p, x)
+
+    def combine(a, b):
+        (fa, ca, na), (fb, cb, nb) = a, b
+        return (fa * fb, fb * ca + cb, fb * na + nb)
+
+    f_, c_, n_ = jax.lax.associative_scan(
+        combine, (f, i * z, i), axis=1)
+    hseq = o * c_ / jnp.maximum(jnp.abs(n_), 1.0)
+    y = L.linear(p["proj"], hseq.astype(x.dtype))
+    if return_state:
+        return y, {"c": c_[:, -1], "n": n_[:, -1]}
+    return y
+
+
+def slstm_decode(cfg, p, x, state):
+    z, i, f, o = _slstm_gates(p, x)
+    c = f[:, 0] * state["c"] + i[:, 0] * z[:, 0]
+    n = f[:, 0] * state["n"] + i[:, 0]
+    h = o[:, 0] * c / jnp.maximum(jnp.abs(n), 1.0)
+    y = L.linear(p["proj"], h[:, None].astype(x.dtype))
+    return y, {"c": c, "n": n}

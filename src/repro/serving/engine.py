@@ -1,0 +1,190 @@
+"""Continuous-batching inference engine, scheduled by UFS in live mode.
+
+The engine owns a fixed request-slot pool inside one batched model cache and
+emits bounded *work items* to the scheduler:
+
+* a **decode job** (time-sensitive tier): one chunk = one batched decode
+  step over all active requests -- short device burst, then back to the
+  queue (the CPU-bursty analogue);
+* **prefill jobs** per admitted request (tier configurable: interactive
+  prefill is time-sensitive, bulk/batch ingestion is background);
+* the trainer's microbatch jobs (background tier) contend for the same
+  slots -- the mixed workload of the paper, on real JAX work.
+
+Requests carry ``tier``/``weight`` annotations -- the client-facing analogue
+of the paper's ``SET task_tier/task_weight`` SQL interface.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.live import LiveJob, LiveKernel
+from ..core.task import Tier
+from .kv_cache import CacheSlotPool
+
+_req_ids = itertools.count(1)
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    tier: str = "time-sensitive"        # SET task_tier analogue
+    weight: float = 10_000.0            # SET task_weight analogue
+    rid: int = field(default_factory=lambda: next(_req_ids))
+    submitted: float = 0.0
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+    tokens: list = field(default_factory=list)
+    slot: Optional[int] = None
+    done_event: threading.Event = field(default_factory=threading.Event)
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.finished is None else self.finished - self.submitted
+
+
+class InferenceEngine:
+    def __init__(self, model, params, kernel: LiveKernel, *,
+                 max_batch: int = 8, max_len: int = 256,
+                 group_name: str = "serve"):
+        self.model = model
+        self.params = params
+        self.kernel = kernel
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.group = kernel.create_group(group_name, Tier.TIME_SENSITIVE, 10_000.0)
+        # Bulk-ingestion prefill runs in the background tier: the paper's
+        # core idea applied inside serving -- long prefills use only slack
+        # and are never dispatched ahead of interactive decode steps.
+        self.bulk_group = kernel.create_group(group_name + "-bulk",
+                                              Tier.BACKGROUND, 100.0)
+        self.pool = CacheSlotPool(kernel, max_batch)
+        self.caches = model.init_cache(max_batch, max_len)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.pending: list = []
+        self._lock = threading.Lock()
+        self.completed: list = []
+        self._decode = jax.jit(model.decode_step)
+        self._job = LiveJob(self.group, self._decode_chunk, name="decode-loop",
+                            kind="bursty")
+        self._running = False
+
+    # ----------------------------------------------------------------- API
+    def start(self) -> None:
+        self._running = True
+        self.kernel.wake(self._job)
+
+    def stop(self) -> None:
+        self._running = False
+
+    def submit(self, req: Request) -> Request:
+        req.submitted = time.monotonic()
+        if req.tier == "background":
+            # bulk request: its prefill is a background job; once prefilled
+            # the request joins the (time-sensitive) decode batch.
+            job = LiveJob(self.bulk_group,
+                          lambda budget, r=req: self._bulk_prefill_chunk(r),
+                          name=f"bulk-prefill-{req.rid}", kind="bound")
+            self.kernel.wake(job)
+            return req
+        with self._lock:
+            self.pending.append(req)
+        if self._job.state.value == "blocked":
+            self.kernel.wake(self._job)      # new work arrived: wake the loop
+        return req
+
+    def _bulk_prefill_chunk(self, req: Request) -> str:
+        slot = self.pool.alloc(self._job, str(req.rid))
+        if slot is None:
+            return "yield"                   # no slot free yet: retry later
+        plen = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        logits, caches1 = self.model.prefill(self.params, batch, self.max_len)
+        with self._lock:
+            self.caches = _write_slot(self.caches, caches1, slot)
+            self.lengths[slot] = plen
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.tokens.append(tok)
+            req.first_token = time.monotonic()
+            self.active[slot] = req
+        if self._job.state.value == "blocked":
+            self.kernel.wake(self._job)
+        return "done"
+
+    # ------------------------------------------------------------ mechanics
+    def _admit(self) -> None:
+        """Admit pending requests into free cache slots (prefill inline --
+        prompts are short in the demo; long prompts become chunked prefill
+        jobs in examples/mixed_serving.py)."""
+        while self.pending and self.pool.free:
+            with self._lock:
+                if not self.pending:
+                    return
+                req = self.pending.pop(0)
+            slot = self.pool.alloc(self._job, str(req.rid))
+            if slot is None:
+                with self._lock:
+                    self.pending.insert(0, req)
+                return
+            # single-request prefill into the pooled cache at `slot`
+            plen = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            logits, caches1 = self.model.prefill(self.params, batch, self.max_len)
+            self.caches = _write_slot(self.caches, caches1, slot)
+            self.lengths[slot] = plen
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.tokens.append(tok)
+            req.first_token = time.monotonic()
+            self.active[slot] = req
+
+    def _decode_chunk(self, budget: float) -> str:
+        """One bounded chunk: admit + one batched decode step."""
+        self._admit()
+        if not self.active:
+            return "blocked" if self._running else "done"
+        pos = int(self.lengths.max())
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.tokens[-1]
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           jnp.asarray(toks), pos)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        now = time.monotonic()
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.tokens.append(int(nxt[slot]))
+            self.lengths[slot] += 1
+            if len(req.tokens) >= req.max_new_tokens or self.lengths[slot] >= self.max_len - 1:
+                req.finished = now
+                finished.append(slot)
+        for slot in finished:
+            req = self.active.pop(slot)
+            self.completed.append(req)
+            req.done_event.set()
+            self.pool.release(self._job, slot)
+            self.lengths[slot] = 0
+        return "yield" if (self.active or self.pending or self._running) else "done"
+
+
+def _write_slot(pool_caches, single_caches, slot: int):
+    """Copy a batch-1 cache pytree into row ``slot`` of the pooled caches.
+    The batch dim is the first dim where the single cache has size 1 and the
+    pool has the pool size (layer dims of scanned segments match on both)."""
+    def write(pool_leaf, one_leaf):
+        for d in range(pool_leaf.ndim):
+            if one_leaf.shape[d] == 1 and pool_leaf.shape[d] > 1:
+                idx = [slice(None)] * pool_leaf.ndim
+                idx[d] = slice(slot, slot + 1)
+                return pool_leaf.at[tuple(idx)].set(one_leaf.astype(pool_leaf.dtype))
+        return pool_leaf
+    return jax.tree.map(write, pool_caches, single_caches)

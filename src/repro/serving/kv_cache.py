@@ -1,0 +1,43 @@
+"""Serving-side KV cache slot management.
+
+The engine keeps a fixed pool of per-request cache slots inside the batched
+model cache (batch dimension = pool size). The allocator's free-list is
+guarded by a hint-instrumented LiveLock -- the engine-level analogue of the
+shared-structure LWLocks the paper hints on: if a background task (bulk
+prefill, compaction) holds the allocator while a time-sensitive decode
+needs a slot, the scheduler boosts the holder.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.live import LiveKernel, LiveLock
+
+
+class CacheSlotPool:
+    def __init__(self, kernel: LiveKernel, n_slots: int):
+        self.n = n_slots
+        self.free = list(range(n_slots))
+        self.lock = LiveLock(kernel, "kv-slot-allocator")
+        self.in_use: dict[int, str] = {}
+
+    def alloc(self, job, request_id: str) -> Optional[int]:
+        if not self.lock.acquire(job):
+            return None
+        try:
+            if not self.free:
+                return None
+            slot = self.free.pop()
+            self.in_use[slot] = request_id
+            return slot
+        finally:
+            self.lock.release(job)
+
+    def release(self, job, slot: int) -> None:
+        if not self.lock.acquire(job):
+            return
+        try:
+            self.in_use.pop(slot, None)
+            self.free.append(slot)
+        finally:
+            self.lock.release(job)

@@ -1,0 +1,70 @@
+"""Training step construction: grad accumulation, optional gradient
+compression (error feedback), remat-aware loss, metrics.
+
+The returned ``train_step(state, batch) -> (state, metrics)`` is what the
+launcher jits with FSDP/TP shardings and what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import grad_compress, optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    grad_accum: int = 1
+    compress_grads: bool = False
+    opt: opt.OptimizerConfig = dataclasses.field(default_factory=opt.OptimizerConfig)
+
+
+def init_state(model, train_cfg: TrainConfig, key):
+    params = model.init_params(key)
+    state = {"params": params, "opt": opt.init_state(train_cfg.opt, params)}
+    if train_cfg.compress_grads:
+        state["ef"] = grad_compress.init_error_state(params)
+    return state
+
+
+def make_train_step(model, train_cfg: TrainConfig):
+    accum = train_cfg.grad_accum
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, gsum, grads), lsum + loss), None
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+        new_state = dict(state)
+        if train_cfg.compress_grads:
+            grads, new_ef = grad_compress.compress_decompress(grads, state["ef"])
+            new_state["ef"] = new_ef
+        new_params, new_opt, om = opt.apply_updates(
+            train_cfg.opt, params, grads, state["opt"])
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis) on scheduler invariants."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import Job, SchedKernel, Tier, make_policy
+from repro.core.runnable_tree import RunnableTree
+from repro.core.task import WorkloadGroup
+from repro.core.workloads import bound_worker
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=100.0), min_size=1,
+                max_size=24),
+       st.data())
+def test_runnable_tree_always_returns_min(vrts, data):
+    """peek_min == min over live members, under arbitrary insert/remove/rekey."""
+    tree = RunnableTree()
+    groups = []
+    for i, v in enumerate(vrts):
+        g = WorkloadGroup(f"g{i}", Tier.BACKGROUND)
+        g.vruntime = v
+        tree.insert(g)
+        groups.append(g)
+    live = dict.fromkeys(range(len(groups)))
+    for _ in range(min(30, 3 * len(groups))):
+        op = data.draw(st.sampled_from(["remove", "rekey", "peek"]))
+        if op == "remove" and live:
+            i = data.draw(st.sampled_from(sorted(live)))
+            tree.remove(groups[i])
+            del live[i]
+        elif op == "rekey" and live:
+            i = data.draw(st.sampled_from(sorted(live)))
+            groups[i].vruntime = data.draw(
+                st.floats(min_value=0.0, max_value=100.0))
+            tree.insert(groups[i])
+        got = tree.peek_min()
+        if not live:
+            assert got is None
+        else:
+            expect = min(groups[i].vruntime for i in live)
+            assert got.vruntime == expect
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_slots=st.integers(min_value=1, max_value=4),
+       n_jobs=st.integers(min_value=1, max_value=6),
+       seed=st.integers(min_value=0, max_value=999))
+def test_work_conservation(n_slots, n_jobs, seed):
+    """With CPU-bound jobs >= 1, no capacity is wasted while work is
+    runnable: total busy time == min(n_jobs, n_slots) * horizon."""
+    k = SchedKernel(n_slots, make_policy("ufs"))
+    g = k.create_group("bg", Tier.BACKGROUND, 100)
+    for i in range(n_jobs):
+        k.add_job(Job(g, behavior=bound_worker(seed + i, query_cpu=1e6),
+                      kind="bound"))
+    horizon = 2.0
+    m = k.run(horizon)
+    busy = sum(m.slot_busy.values())
+    expect = min(n_jobs, n_slots) * horizon
+    assert abs(busy - expect) < 0.05 * expect + 0.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(w1=st.integers(min_value=100, max_value=10000),
+       w2=st.integers(min_value=100, max_value=10000))
+def test_bg_proportional_share_tracks_weights(w1, w2):
+    """Two saturating background groups split capacity ~ proportional to
+    weight (cgroup cpu.weight semantics) under tree dispatch."""
+    k = SchedKernel(1, make_policy("ufs"))
+    g1 = k.create_group("g1", Tier.BACKGROUND, w1)
+    g2 = k.create_group("g2", Tier.BACKGROUND, w2)
+    k.add_job(Job(g1, behavior=bound_worker(1, query_cpu=1e6)))
+    k.add_job(Job(g2, behavior=bound_worker(2, query_cpu=1e6)))
+    k.run(5.0)
+    share = g1.usage_time / max(g2.usage_time, 1e-9)
+    expect = w1 / w2
+    assert 0.6 * expect < share < 1.6 * expect
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=99))
+def test_ts_always_beats_bg_for_cpu(seed):
+    """Strict tier precedence: a saturating TS job squeezes BG to ~zero."""
+    k = SchedKernel(1, make_policy("ufs"))
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 10000)   # weight cannot help
+    k.add_job(Job(ts, behavior=bound_worker(seed, query_cpu=1e6)))
+    k.add_job(Job(bg, behavior=bound_worker(seed + 1, query_cpu=1e6)))
+    k.run(2.0)
+    assert bg.usage_time < 0.02
+    assert ts.usage_time > 1.95

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests: the paper's headline claims, reproduced in
+sim mode (fast, deterministic). Quantitative bands follow Figures 1/6 and
+Table 3; tolerances are loose enough for short windows."""
+import pytest
+
+from repro.core.experiment import scenario
+
+
+DUR, WARM = 8.0, 3.0
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for mix in ("solo", "minmax", "5050"):
+        for pol in ("ufs", "vdf", "fifo", "rr"):
+            out[(mix, pol)] = scenario(pol, mix, n_slots=8, n=8,
+                                       duration=DUR, warmup=WARM)
+    return out
+
+
+def test_solo_equal_across_schedulers(results):
+    thr = [results[("solo", p)].thr("ts") for p in ("ufs", "vdf", "fifo", "rr")]
+    assert max(thr) / min(thr) < 1.05
+
+
+def test_solo_latency_calibration(results):
+    ls = results[("solo", "ufs")].lat("ts")
+    # Table 3 SOLO: mean ~3.06 ms, p95 ~5.8 ms
+    assert 2.5e-3 < ls["mean"] < 3.6e-3
+    assert 4.5e-3 < ls["p95"] < 7.5e-3
+
+
+def test_minmax_ufs_matches_solo(results):
+    # UFS keeps time-sensitive throughput at SOLO level under MIN:MAX
+    assert results[("minmax", "ufs")].thr("ts") > 0.97 * results[("solo", "ufs")].thr("ts")
+
+
+def test_minmax_vdf_degrades_2x(results):
+    """EEVDF loses ~50% TS throughput at MIN:MAX (paper: 'reducing their
+    throughput by 50%'); UFS delivers ~2x EEVDF."""
+    ufs = results[("minmax", "ufs")].thr("ts")
+    vdf = results[("minmax", "vdf")].thr("ts")
+    assert ufs > 1.5 * vdf
+
+
+def test_minmax_latency_tail(results):
+    # Table 3 MIN:MAX: EEVDF mean ~2x UFS, p95 ~2.2x UFS
+    u, v = results[("minmax", "ufs")].lat("ts"), results[("minmax", "vdf")].lat("ts")
+    assert v["mean"] > 1.6 * u["mean"]
+    assert v["p95"] > 1.7 * u["p95"]
+
+
+def test_minmax_vdf_lets_background_overrun(results):
+    # 'they allow background CPU-bound tasks to reach unexpectedly high throughput'
+    assert results[("minmax", "vdf")].thr("bg") > 1.4 * results[("minmax", "ufs")].thr("bg")
+
+
+def test_5050_fifo_collapses(results):
+    # 'the throughput collapses, even reaching zero in one case' (FIFO)
+    assert results[("5050", "fifo")].thr("ts") == 0.0
+
+
+def test_5050_rr_deteriorates(results):
+    # Table 3 50:50: RR latencies 'completely deteriorated'
+    rr = results[("5050", "rr")].lat("ts")
+    ufs = results[("5050", "ufs")].lat("ts")
+    assert rr["mean"] > 10 * ufs["mean"]
+
+
+def test_5050_ufs_balances(results):
+    """UFS keeps both classes alive at 50:50 (paper: ~75% bursty / ~50%
+    bound of SOLO)."""
+    solo_ts = results[("solo", "ufs")].thr("ts")
+    r = results[("5050", "ufs")]
+    assert r.thr("ts") > 0.5 * solo_ts
+    assert r.thr("bg") > 0.35 * 8.0          # bound solo ~= 8 q/s on 8 slots
+    # and better than VDF for the bursty class
+    assert r.thr("ts") > 1.2 * results[("5050", "vdf")].thr("ts")
+
+
+def test_fig2_placement_skew(results):
+    """EEVDF stacks bursty tasks on few slots (Figure 2); UFS spreads."""
+    vdf_skew = results[("minmax", "vdf")].metrics.slot_skew("bursty", 8)
+    ufs_skew = results[("minmax", "ufs")].metrics.slot_skew("bursty", 8)
+    assert vdf_skew > 1.25
+    assert ufs_skew < 1.1
