@@ -1,0 +1,86 @@
+"""Sim/live backend parity: the same UFS policy object driving the same
+mixed workload shape through both executors (DESIGN.md section 7).
+
+One slot, one time-sensitive bursty worker against one background bound
+worker. Both backends should agree qualitatively: preemptions occur only in
+the mixed run (the background job is kicked off the slot when TS work
+wakes), never in the solo run, and the TS class holds the larger CPU share
+under contention. Sim numbers are deterministic; live numbers come from
+real threads so only the ordering is comparable.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import Job, SchedKernel, Tier, make_policy
+from repro.core.live import LiveJob, LiveKernel
+from repro.core.task import JobState
+from repro.core.workloads import bound_worker, bursty_worker
+
+
+def _sim_run(mixed: bool, dur: float):
+    kernel = SchedKernel(1, make_policy("ufs"), seed=7)
+    ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = kernel.create_group("bg", Tier.BACKGROUND, 1)
+    kernel.add_job(Job(ts, behavior=bursty_worker(1), name="ts0",
+                       kind="bursty"), at=0.0)
+    if mixed:
+        kernel.add_job(Job(bg, behavior=bound_worker(2, query_cpu=0.05),
+                           name="bg0", kind="bound"), at=0.0)
+    m = kernel.run(dur)
+    return m.preemptions, m.cpu_by_group["ts"], m.cpu_by_group["bg"]
+
+
+def _live_run(mixed: bool, dur: float):
+    kernel = LiveKernel(1, make_policy("ufs"))
+    ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = kernel.create_group("bg", Tier.BACKGROUND, 1)
+
+    def ts_chunk(budget):
+        time.sleep(0.002)                  # the transaction burst
+        return "blocked"                   # then wait for the next request
+
+    def bg_chunk(budget):
+        time.sleep(0.002)                  # one analytics chunk
+        return "yield"                     # immediately runnable again
+
+    tsj = LiveJob(ts, ts_chunk, name="ts0", kind="bursty")
+    stop = threading.Event()
+
+    def waker():                           # closed-loop client: think 5 ms
+        while not stop.is_set():
+            time.sleep(0.005)
+            if tsj.state == JobState.BLOCKED:
+                kernel.wake(tsj)
+
+    kernel.start()
+    kernel.wake(tsj)
+    if mixed:
+        kernel.wake(LiveJob(bg, bg_chunk, name="bg0", kind="bound"))
+    wt = threading.Thread(target=waker, daemon=True)
+    wt.start()
+    time.sleep(dur)
+    stop.set()
+    wt.join()
+    kernel.stop()
+    m = kernel.metrics
+    return m.preemptions, m.cpu_by_group["ts"], m.cpu_by_group["bg"]
+
+
+def run(short=False):
+    sim_dur = 2.0 if short else 5.0
+    live_dur = 0.5 if short else 1.5
+    rows = []
+    for backend, runner, dur in (("sim", _sim_run, sim_dur),
+                                 ("live", _live_run, live_dur)):
+        t0 = time.perf_counter()
+        p_mixed, ts_cpu, bg_cpu = runner(True, dur)
+        p_solo, _, _ = runner(False, dur)
+        us = (time.perf_counter() - t0) * 1e6
+        total = (ts_cpu + bg_cpu) or 1.0
+        rows.append((f"parity.{backend}.preempt_mixed", us, f"{p_mixed}"))
+        rows.append((f"parity.{backend}.preempt_solo", us, f"{p_solo}"))
+        rows.append((f"parity.{backend}.ts_share_pct", us,
+                     f"{100 * ts_cpu / total:.0f}"))
+    return rows

@@ -25,8 +25,9 @@ def main() -> None:
     from . import paper_tables
     benches = list(paper_tables.ALL)
     if not args.skip_live:
-        from . import fig10_ml
+        from . import fig10_ml, parity
         benches.append(fig10_ml.run)
+        benches.append(parity.run)
 
     only = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")

@@ -11,7 +11,9 @@ Public surface:
 """
 from .task import (Job, JobState, Tier, WorkloadGroup, Burst, Block,
                    RequestBegin, RequestEnd, Exit)
-from .kernel import SchedKernel, Slot, SimClock, Policy, DEFAULT_SLICE
+from .base import SchedCore, Executor, Policy, Slot, DEFAULT_SLICE
+from .kernel import SchedKernel, SimClock, SimExecutor
+from .live import LiveKernel, LiveJob, LiveLock, ThreadExecutor
 from .hints import HintTable
 from .locks import SimLock, spin_acquire
 from .metrics import Metrics, percentile
@@ -21,7 +23,9 @@ from .policies import make_policy, POLICIES
 __all__ = [
     "Job", "JobState", "Tier", "WorkloadGroup", "Burst", "Block",
     "RequestBegin", "RequestEnd", "Exit",
-    "SchedKernel", "Slot", "SimClock", "Policy", "DEFAULT_SLICE",
+    "SchedCore", "Executor", "Policy", "Slot", "DEFAULT_SLICE",
+    "SchedKernel", "SimClock", "SimExecutor",
+    "LiveKernel", "LiveJob", "LiveLock", "ThreadExecutor",
     "HintTable", "SimLock", "spin_acquire", "Metrics", "percentile",
     "UFSPolicy", "make_policy", "POLICIES",
 ]

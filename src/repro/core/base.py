@@ -1,0 +1,355 @@
+"""The shared scheduling core: one policy surface, pluggable execution.
+
+This module is the single implementation of the scheduling machinery that
+both execution modes share (DESIGN.md section 2).  :class:`SchedCore` owns
+
+* **slots** -- execution units (device slots on a pod; CPUs in the paper),
+  each with a local DSQ;
+* the **group/job registries** (cgroup analogue, task table);
+* the **job lifecycle** -- enqueue (wake/requeue), dispatch
+  (:meth:`SchedCore.schedule_next`), start/stop bookkeeping, preemption;
+* **hint -> boost wiring** (priority-inversion avoidance) and **metrics**;
+
+parameterized by a narrow :class:`Executor` protocol with two backends:
+
+* ``SimExecutor`` (``repro.core.kernel``) -- the deterministic discrete-event
+  clock driving generator-based jobs in virtual time;
+* ``ThreadExecutor`` (``repro.core.live``) -- worker threads driving real
+  (JAX) ``run_chunk`` jobs, with chunk-granular preempt polling.
+
+Policies (:class:`Policy`) attach to the *core*, never to a backend, so the
+same policy object behaves identically under simulation and deployment --
+the sim/live parity invariant (tests/test_parity.py).
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from contextlib import nullcontext
+from typing import Callable, ContextManager, Optional
+
+from .dsq import GroupDSQ, LocalDSQ
+from .hints import HintTable
+from .metrics import Metrics
+from .task import Job, JobState, Tier, WorkloadGroup
+
+DEFAULT_SLICE = 0.003  # 3 ms bounded execution interval (paper section 5.1.1)
+
+_NULL_GUARD = nullcontext()
+
+
+class Slot:
+    """An execution unit: one mesh-slice program context (a CPU, in the paper).
+
+    Holds only backend-independent execution state.  Policy-private state
+    (e.g. the RT fair-server window) lives in the policy; backend-private
+    state (run-end tokens, preempt flags) lives in the executor.
+    """
+
+    def __init__(self, sid: int):
+        self.sid = sid
+        self.local_dsq = LocalDSQ()
+        self.current: Optional[Job] = None
+        self.run_started = 0.0
+        self.slice_budget = 0.0
+        self.online = True            # False once drained (elasticity)
+
+    @property
+    def idle(self) -> bool:
+        return self.current is None and len(self.local_dsq) == 0
+
+    def __repr__(self) -> str:  # pragma: no cover
+        cur = self.current.name if self.current else "-"
+        return f"Slot({self.sid}, cur={cur}, q={len(self.local_dsq)})"
+
+
+class Policy(ABC):
+    """sched_ext-style policy callback surface (DESIGN.md section 3).
+
+    ``attach`` receives the :class:`SchedCore` (the facades subclass it, so
+    ``self.kernel`` works against either backend).  Callbacks are always
+    invoked with the core's mutation guard held; policies never advance time
+    themselves, they only mutate queue state and request kicks.
+    """
+
+    name = "abstract"
+
+    def attach(self, kernel: "SchedCore") -> None:
+        self.kernel = kernel
+
+    @abstractmethod
+    def enqueue(self, job: Job, requeue: bool = False) -> None:
+        """Job became runnable (wakeup) or must be requeued (preempt/slice)."""
+
+    @abstractmethod
+    def dispatch(self, slot: Slot) -> None:
+        """Slot needs work and its local DSQ is empty: pull if possible."""
+
+    def pick_next(self, slot: Slot):
+        """Select the next job for a free slot: local DSQ first, then pull
+        via :meth:`dispatch`. Policies may override the pick order (e.g. the
+        RT fair-server window)."""
+        nxt = slot.local_dsq.pop_front()
+        while nxt is not None and nxt.state != JobState.RUNNABLE:
+            nxt = slot.local_dsq.pop_front()
+        if nxt is None:
+            self.kernel.metrics.dispatches += 1
+            self.dispatch(slot)
+            nxt = slot.local_dsq.pop_front()
+            while nxt is not None and nxt.state != JobState.RUNNABLE:
+                nxt = slot.local_dsq.pop_front()
+        return nxt
+
+    def running(self, job: Job, slot: Slot) -> None:
+        """Job starts executing on slot."""
+
+    def stopping(self, job: Job, slot: Slot, used: float) -> None:
+        """Job stops executing (block/preempt/slice/exit); charge service."""
+
+    def task_slice(self, job: Job) -> float:
+        return DEFAULT_SLICE
+
+    def on_boost(self, job: Job) -> None:
+        """Hint boost fired for a queued/running background job."""
+
+    def on_unboost(self, job: Job) -> None:
+        pass
+
+    def periodic(self) -> None:
+        """Optional periodic work (load balancing); driven by the core timer."""
+
+    periodic_interval: Optional[float] = None
+
+
+class Executor(ABC):
+    """Narrow backend protocol: how the core's decisions are carried out.
+
+    The core calls *down* into the executor for time, deferred callbacks,
+    mutual exclusion, and kick delivery; the executor calls *up* into the
+    core's lifecycle methods (``schedule_next`` / ``start_job`` /
+    ``stop_job`` / ``preempt_slot``) when its execution model needs them.
+    """
+
+    core: "SchedCore"
+
+    def bind(self, core: "SchedCore") -> None:
+        self.core = core
+
+    @property
+    @abstractmethod
+    def now(self) -> float:
+        """Current time on this backend's clock (virtual or monotonic)."""
+
+    @abstractmethod
+    def defer(self, dt: float, fn: Callable[[], None]) -> None:
+        """Run ``fn`` after ``dt`` seconds on this backend's clock."""
+
+    @abstractmethod
+    def guard(self) -> ContextManager:
+        """Mutation guard for scheduler state.  Re-entrant: lifecycle code
+        nests freely.  Sim: a no-op (single-threaded event loop); threads: a
+        condition variable that wakes idle workers on exit."""
+
+    @abstractmethod
+    def deliver_kick(self, slot: Slot, preempt: bool) -> None:
+        """Backend-specific kick delivery: sim dispatches/preempts at the
+        current event; threads set a chunk-granular preempt flag and notify."""
+
+    # ---- optional lifecycle hooks -------------------------------------
+    def job_started(self, slot: Slot) -> None:
+        """Dispatch tail after :meth:`SchedCore.start_job` (sim arms the
+        run-end event; threads run the chunk inline in the worker)."""
+
+    def job_stopping(self, slot: Slot) -> None:
+        """Stop head before the policy is charged (sim cancels the pending
+        run-end event)."""
+
+    def job_preempted(self, job: Job, slot: Slot, used: float) -> None:
+        """Continuation for a job forced off a slot mid-execution."""
+
+    def interrupt(self, slot: Slot) -> None:
+        """Force the current job off ``slot`` (drain): sim preempts at the
+        current event; threads request a chunk-boundary stop."""
+
+    def slot_added(self, slot: Slot) -> None:
+        """A slot joined the pool (elastic scale-up)."""
+
+    def start(self) -> None:
+        """Begin executing (no-op for the event-driven sim)."""
+
+    def stop(self) -> None:
+        """Stop executing and release backend resources."""
+
+
+class SchedCore:
+    """Backend-independent scheduling core shared by sim and live kernels.
+
+    ``SchedKernel`` (sim) and ``LiveKernel`` (threads) are thin facades over
+    this class; all enqueue/dispatch/start/stop/preempt logic and the
+    hint-boost wiring live here, once.
+    """
+
+    def __init__(
+        self,
+        n_slots: int,
+        policy: Policy,
+        executor: Executor,
+        hints: Optional[HintTable] = None,
+        metrics: Optional[Metrics] = None,
+        kick_latency: float = 0.0,
+        hints_enabled: bool = True,
+    ):
+        self.executor = executor
+        self.slots = [Slot(i) for i in range(n_slots)]
+        self.policy = policy
+        self.hints = hints or HintTable()
+        self.hints_enabled = hints_enabled
+        self.metrics = metrics or Metrics()
+        self.kick_latency = kick_latency
+        self.jobs: dict[int, Job] = {}
+        self.groups: dict[str, WorkloadGroup] = {}
+        self.on_panic: Optional[Callable[[Job], None]] = None
+        executor.bind(self)
+        policy.attach(self)
+        self.hints.on_boost = self._hint_boost
+        self.hints.on_unboost = self._hint_unboost
+        if policy.periodic_interval:
+            self._schedule_periodic()
+
+    # ------------------------------------------------------------- utilities
+    @property
+    def now(self) -> float:
+        return self.executor.now
+
+    def create_group(self, name: str, tier: Tier, weight: float = 100.0,
+                     parent: Optional[WorkloadGroup] = None, **kw) -> WorkloadGroup:
+        g = WorkloadGroup(name, tier, weight, parent=parent, **kw)
+        g.dsq = GroupDSQ()          # custom DSQ (background deferred dispatch)
+        self.groups[name] = g
+        return g
+
+    def online_slots(self) -> list:
+        return [s for s in self.slots if s.online]
+
+    # ------------------------------------------------------------- enqueue
+    def wake(self, job: Job) -> None:
+        """Job becomes runnable; hand to the policy's enqueue path."""
+        with self.executor.guard():
+            if job.state == JobState.EXITED:
+                return
+            self.jobs.setdefault(job.jid, job)
+            job.state = JobState.RUNNABLE
+            job.wakeup_time = self.now
+            job.location = None
+            self.policy.enqueue(job, requeue=False)
+
+    def requeue(self, job: Job) -> None:
+        with self.executor.guard():
+            job.state = JobState.RUNNABLE
+            job.location = None
+            self.policy.enqueue(job, requeue=True)
+
+    # ------------------------------------------------------------- kicks
+    def kick(self, slot: Slot, preempt: bool = False) -> None:
+        """Wake an idle slot, or (preempt=True) force the running job off.
+
+        ``kick_latency`` models the TPU chunk-boundary adaptation: a kick
+        takes effect only once the in-flight device program retires.
+        """
+        self.metrics.kicks += 1
+        if self.kick_latency > 0:
+            self.executor.defer(self.kick_latency,
+                                lambda: self.executor.deliver_kick(slot, preempt))
+        else:
+            self.executor.deliver_kick(slot, preempt)
+
+    # ------------------------------------------------------------- dispatch
+    def schedule_next(self, slot: Slot) -> None:
+        """Fill a free slot: policy pick, shared start bookkeeping, then the
+        backend's execution tail (arm a run-end event / run the chunk)."""
+        if not slot.online or slot.current is not None:
+            return
+        nxt = self.policy.pick_next(slot)
+        if nxt is None:
+            return                               # idle
+        self.start_job(slot, nxt)
+        self.executor.job_started(slot)
+
+    # --------------------------------------------------------- start / stop
+    def start_job(self, slot: Slot, job: Job) -> None:
+        """Shared bookkeeping when a job begins running on a slot."""
+        assert job.state == JobState.RUNNABLE, f"{job} not runnable"
+        job.state = JobState.RUNNING
+        job.location = None
+        if job.wakeup_time >= 0.0:
+            self.metrics.record_wakeup(job.group.name, self.now - job.wakeup_time, self.now)
+            job.wakeup_time = -1.0               # record only first start per wake
+        job.prev_slot = slot.sid
+        slot.current = job
+        slot.run_started = self.now
+        slot.slice_budget = self.policy.task_slice(job)
+        self.policy.running(job, slot)
+
+    def stop_job(self, slot: Slot, used: float) -> Job:
+        """Shared bookkeeping when the current job stops (block / preempt /
+        slice expiry / exit); charges the policy and the metrics."""
+        job = slot.current
+        assert job is not None
+        self.executor.job_stopping(slot)         # cancel in-flight run-end event
+        self.policy.stopping(job, slot, used)
+        self.metrics.record_run(slot.sid, job.kind, job.group.name, used, self.now)
+        slot.current = None
+        return job
+
+    # ------------------------------------------------------------- preempt
+    def preempt_slot(self, slot: Slot) -> None:
+        """Force the running job off ``slot`` now; the backend decides the
+        job's continuation (burst accounting in sim; chunk epilogue live)."""
+        job = slot.current
+        if job is None:
+            return
+        self.metrics.preemptions += 1
+        used = self.now - slot.run_started
+        self.stop_job(slot, used)
+        self.executor.job_preempted(job, slot, used)
+        self.schedule_next(slot)
+
+    # ----------------------------------------------------------- hint wiring
+    def _hint_boost(self, job: Job) -> None:
+        with self.executor.guard():
+            self.policy.on_boost(job)
+
+    def _hint_unboost(self, job: Job) -> None:
+        with self.executor.guard():
+            self.policy.on_unboost(job)
+
+    # ----------------------------------------------------------- elasticity
+    def add_slot(self) -> Slot:
+        with self.executor.guard():
+            slot = Slot(len(self.slots))
+            self.slots.append(slot)
+        self.executor.slot_added(slot)
+        return slot
+
+    def drain_slot(self, sid: int) -> None:
+        """Take a slot offline: requeue its work elsewhere (node failure /
+        elastic downscale)."""
+        with self.executor.guard():
+            slot = self.slots[sid]
+            slot.online = False
+            if slot.current is not None:
+                self.executor.interrupt(slot)
+            while True:
+                job = slot.local_dsq.pop_front()
+                if job is None:
+                    break
+                self.requeue(job)
+
+    # ------------------------------------------------------------- periodic
+    def _schedule_periodic(self) -> None:
+        interval = self.policy.periodic_interval
+
+        def tick() -> None:
+            with self.executor.guard():
+                self.policy.periodic()
+            self.executor.defer(interval, tick)
+        self.executor.defer(interval, tick)

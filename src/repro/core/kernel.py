@@ -1,36 +1,43 @@
-"""The scheduling kernel: slots, event loop, dispatch/preemption machinery.
+"""Sim-mode execution backend: the discrete-event clock behind SchedCore.
 
 This is the host-side analogue of the kernel scheduling core that
-``sched_ext`` policies plug into (DESIGN.md section 2). It owns:
+``sched_ext`` policies plug into (DESIGN.md section 2).  The shared
+scheduling machinery -- slots, group/job registries, the policy callback
+surface, enqueue/dispatch/start/stop/preempt, hint wiring -- lives in
+:mod:`repro.core.base` (:class:`~repro.core.base.SchedCore`) and is common
+to both execution modes.  This module contributes the **sim** backend:
 
-* **slots** -- execution units (device slots on a pod; CPUs in the paper),
-  each with a local DSQ;
-* the **event loop** -- a deterministic discrete-event clock in sim mode
-  (benchmarks reproduce the paper's experiments in virtual time); live mode
-  (``repro.serving.live``) drives the same policy objects with real threads;
-* the callback surface policies implement (:class:`Policy`), mirroring
-  sched_ext's ``select_cpu / enqueue / dispatch / running / stopping``;
-* preemption **kicks**, job lifecycle, lock parking/spinning, hint wiring.
+* :class:`SimClock` -- a deterministic discrete-event clock (heap of
+  timestamped callbacks); benchmarks reproduce the paper's experiments in
+  virtual time;
+* :class:`SimExecutor` -- drives generator-based :class:`Job` behaviours
+  (bursts, blocks, lock phases) against the core: arms run-end events,
+  applies burst accounting on preemption, advances the phase machinery;
+* :class:`SchedKernel` -- the sim facade over :class:`SchedCore`
+  (``add_job`` / ``run`` / ``create_lock``).
 
-Policies never advance time themselves; they only mutate queue state and
-request kicks, exactly as eBPF callbacks do.
+Live mode (``repro.core.live``) drives the *same* policy objects and the
+same core with real threads.  Policies never advance time themselves; they
+only mutate queue state and request kicks, exactly as eBPF callbacks do.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from abc import ABC, abstractmethod
-from typing import Callable, Optional
+from contextlib import nullcontext
+from typing import Callable, ContextManager, Optional
 
-from .dsq import GroupDSQ, LocalDSQ
+from .base import DEFAULT_SLICE, Executor, Policy, SchedCore, Slot
 from .hints import HintTable
 from .locks import SimLock
 from .metrics import Metrics
 from .task import (AcquireLock, Block, Burst, Exit, Job, JobState, PanicExit,
-                   ReleaseLock, RequestBegin, RequestEnd, Tier, TryLock,
-                   WorkloadGroup)
+                   ReleaseLock, RequestBegin, RequestEnd, TryLock)
 
-DEFAULT_SLICE = 0.003  # 3 ms bounded execution interval (paper section 5.1.1)
+__all__ = ["SimClock", "SimExecutor", "SchedKernel", "Policy", "Slot",
+           "SchedCore", "Executor", "DEFAULT_SLICE"]
+
+_NULL_GUARD = nullcontext()
 
 
 class SimClock:
@@ -58,265 +65,103 @@ class SimClock:
         return not self._heap
 
 
-class Slot:
-    """An execution unit: one mesh-slice program context (a CPU, in the paper)."""
+class SimExecutor(Executor):
+    """Discrete-event backend: jobs are generators of bounded phases.
 
-    def __init__(self, sid: int):
-        self.sid = sid
-        self.local_dsq = LocalDSQ()
-        self.current: Optional[Job] = None
-        self.run_token = 0            # invalidates stale run-end events
-        self.run_started = 0.0
-        self.slice_budget = 0.0
-        self.online = True            # False once drained (elasticity)
-        self.dl_served_until = 0.0    # fair-server window (RT baselines)
-        self.rt_window_start = 0.0    # RT-throttling accounting
-        self.rt_window_usage = 0.0
+    Owns the virtual clock, the per-slot run-end tokens that invalidate
+    stale events, and the phase machinery (:meth:`advance`) that turns a
+    job's behaviour generator into wake/block/lock transitions against the
+    shared core.
+    """
 
-    @property
-    def idle(self) -> bool:
-        return self.current is None and len(self.local_dsq) == 0
-
-    def __repr__(self) -> str:  # pragma: no cover
-        cur = self.current.name if self.current else "-"
-        return f"Slot({self.sid}, cur={cur}, q={len(self.local_dsq)})"
-
-
-class Policy(ABC):
-    """sched_ext-style policy callback surface."""
-
-    name = "abstract"
-
-    def attach(self, kernel: "SchedKernel") -> None:
-        self.kernel = kernel
-
-    @abstractmethod
-    def enqueue(self, job: Job, requeue: bool = False) -> None:
-        """Job became runnable (wakeup) or must be requeued (preempt/slice)."""
-
-    @abstractmethod
-    def dispatch(self, slot: Slot) -> None:
-        """Slot needs work and its local DSQ is empty: pull if possible."""
-
-    def pick_next(self, slot: Slot):
-        """Select the next job for a free slot: local DSQ first, then pull
-        via :meth:`dispatch`. Policies may override the pick order (e.g. the
-        RT fair-server window)."""
-        nxt = slot.local_dsq.pop_front()
-        while nxt is not None and nxt.state != JobState.RUNNABLE:
-            nxt = slot.local_dsq.pop_front()
-        if nxt is None:
-            self.kernel.metrics.dispatches += 1
-            self.dispatch(slot)
-            nxt = slot.local_dsq.pop_front()
-            while nxt is not None and nxt.state != JobState.RUNNABLE:
-                nxt = slot.local_dsq.pop_front()
-        return nxt
-
-    def running(self, job: Job, slot: Slot) -> None:
-        """Job starts executing on slot."""
-
-    def stopping(self, job: Job, slot: Slot, used: float) -> None:
-        """Job stops executing (block/preempt/slice/exit); charge service."""
-
-    def task_slice(self, job: Job) -> float:
-        return DEFAULT_SLICE
-
-    def on_boost(self, job: Job) -> None:
-        """Hint boost fired for a queued/running background job."""
-
-    def on_unboost(self, job: Job) -> None:
-        pass
-
-    def periodic(self) -> None:
-        """Optional periodic work (load balancing); driven by kernel timer."""
-
-    periodic_interval: Optional[float] = None
-
-
-class SchedKernel:
-    """Sim-mode scheduling kernel."""
-
-    def __init__(
-        self,
-        n_slots: int,
-        policy: Policy,
-        hints: Optional[HintTable] = None,
-        metrics: Optional[Metrics] = None,
-        kick_latency: float = 0.0,
-        hints_enabled: bool = True,
-        seed: int = 0,
-    ):
+    def __init__(self) -> None:
         self.clock = SimClock()
-        self.slots = [Slot(i) for i in range(n_slots)]
-        self.policy = policy
-        self.hints = hints or HintTable()
-        self.hints_enabled = hints_enabled
-        self.metrics = metrics or Metrics()
-        self.kick_latency = kick_latency
-        self.jobs: dict[int, Job] = {}
-        self.groups: dict[str, WorkloadGroup] = {}
-        self._rng_state = seed or 1
-        self.on_panic: Optional[Callable[[Job], None]] = None
-        policy.attach(self)
-        self.hints.on_boost = self._hint_boost
-        self.hints.on_unboost = self._hint_unboost
-        if policy.periodic_interval:
-            self._schedule_periodic()
+        self._run_tokens: dict[int, int] = {}
 
-    # ------------------------------------------------------------- utilities
+    # ---------------------------------------------------- Executor protocol
     @property
     def now(self) -> float:
         return self.clock.now
 
-    def create_group(self, name: str, tier: Tier, weight: float = 100.0,
-                     parent: Optional[WorkloadGroup] = None, **kw) -> WorkloadGroup:
-        g = WorkloadGroup(name, tier, weight, parent=parent, **kw)
-        g.dsq = GroupDSQ()          # custom DSQ (background deferred dispatch)
-        self.groups[name] = g
-        return g
+    def defer(self, dt: float, fn: Callable[[], None]) -> None:
+        self.clock.after(dt, fn)
 
-    def create_lock(self, name: str = "") -> SimLock:
-        return SimLock(self, name)
+    def guard(self) -> ContextManager:
+        # Single-threaded event loop: lifecycle code needs no locking.
+        return _NULL_GUARD
 
-    def online_slots(self) -> list:
-        return [s for s in self.slots if s.online]
-
-    # ------------------------------------------------------------ job control
-    def add_job(self, job: Job, at: float = 0.0) -> None:
-        self.jobs[job.jid] = job
-        self.clock.at(at, lambda: self._advance(job))
-
-    def run(self, horizon: float, warmup: float = 0.0) -> Metrics:
-        self.metrics.window_start = warmup
-        self.metrics.window_end = horizon
-        self.clock.run_until(horizon)
-        self._settle_accounting()
-        return self.metrics
-
-    def _settle_accounting(self) -> None:
-        """Charge partially-elapsed runs at the horizon so utilization sums."""
-        for slot in self.slots:
-            job = slot.current
-            if job is not None:
-                used = self.now - slot.run_started
-                if used > 0:
-                    self.metrics.record_run(slot.sid, job.kind, job.group.name, used, self.now)
-                    slot.run_started = self.now
-
-    # ------------------------------------------------------------- scheduling
-    def wake(self, job: Job) -> None:
-        """Job becomes runnable; hand to the policy's enqueue path."""
-        if job.state == JobState.EXITED:
-            return
-        job.state = JobState.RUNNABLE
-        job.wakeup_time = self.now
-        job.location = None
-        self.policy.enqueue(job, requeue=False)
-
-    def requeue(self, job: Job) -> None:
-        job.state = JobState.RUNNABLE
-        job.location = None
-        self.policy.enqueue(job, requeue=True)
-
-    def kick(self, slot: Slot, preempt: bool = False) -> None:
-        """Wake an idle slot, or (preempt=True) force the running job off.
-
-        ``kick_latency`` models the TPU chunk-boundary adaptation: a kick
-        takes effect only once the in-flight device program retires.
-        """
-        self.metrics.kicks += 1
-        if self.kick_latency > 0:
-            self.clock.after(self.kick_latency, lambda: self._kick_now(slot, preempt))
-        else:
-            self._kick_now(slot, preempt)
-
-    def _kick_now(self, slot: Slot, preempt: bool) -> None:
+    def deliver_kick(self, slot: Slot, preempt: bool) -> None:
         if not slot.online:
             return
         if slot.current is None:
-            self._schedule_next(slot)
+            self.core.schedule_next(slot)
         elif preempt:
-            self._preempt(slot)
+            self.core.preempt_slot(slot)
 
-    def _preempt(self, slot: Slot) -> None:
-        job = slot.current
-        if job is None:
-            return
-        self.metrics.preemptions += 1
-        used = self.now - slot.run_started
-        self._stop_current(slot, used)
+    def job_started(self, slot: Slot) -> None:
+        self._arm_run_end(slot)
+
+    def job_stopping(self, slot: Slot) -> None:
+        self._bump_token(slot)                   # cancel in-flight run-end event
+
+    def job_preempted(self, job: Job, slot: Slot, used: float) -> None:
         job.burst_remaining -= used
         if job.burst_remaining <= 1e-12:
             # Raced with burst completion; let the phase machine finish it.
             job.burst_remaining = 0.0
-            self._advance(job)
+            self.advance(job)
         else:
-            self.requeue(job)
-        self._schedule_next(slot)
+            self.core.requeue(job)
 
-    def _stop_current(self, slot: Slot, used: float) -> None:
-        job = slot.current
-        assert job is not None
-        slot.run_token += 1                      # cancel in-flight run-end event
-        self.policy.stopping(job, slot, used)
-        self.metrics.record_run(slot.sid, job.kind, job.group.name, used, self.now)
-        slot.current = None
+    def interrupt(self, slot: Slot) -> None:
+        self.core.preempt_slot(slot)
 
-    def _schedule_next(self, slot: Slot) -> None:
-        if not slot.online or slot.current is not None:
-            return
-        nxt = self.policy.pick_next(slot)
-        if nxt is None:
-            return                               # idle
-        self._start(slot, nxt)
+    def slot_added(self, slot: Slot) -> None:
+        self.clock.after(0.0, lambda: self.core.schedule_next(slot))
 
-    def _start(self, slot: Slot, job: Job) -> None:
-        assert job.state == JobState.RUNNABLE, f"{job} not runnable"
-        job.state = JobState.RUNNING
-        job.location = None
-        if job.wakeup_time >= 0.0:
-            self.metrics.record_wakeup(job.group.name, self.now - job.wakeup_time, self.now)
-            job.wakeup_time = -1.0               # record only first start per wake
-        job.prev_slot = slot.sid
-        slot.current = job
-        slot.run_started = self.now
-        slot.slice_budget = self.policy.task_slice(job)
-        self.policy.running(job, slot)
-        self._arm_run_end(slot)
+    # ------------------------------------------------------- run-end events
+    def _bump_token(self, slot: Slot) -> int:
+        token = self._run_tokens.get(slot.sid, 0) + 1
+        self._run_tokens[slot.sid] = token
+        return token
 
     def _arm_run_end(self, slot: Slot) -> None:
         job = slot.current
         run_for = min(job.burst_remaining, slot.slice_budget)
-        slot.run_token += 1
-        token = slot.run_token
+        token = self._bump_token(slot)
         self.clock.after(run_for, lambda: self._run_end(slot, token))
 
     def _run_end(self, slot: Slot, token: int) -> None:
-        if token != slot.run_token or slot.current is None:
+        if token != self._run_tokens.get(slot.sid) or slot.current is None:
             return                               # stale event (preempted meanwhile)
+        core = self.core
         job = slot.current
-        used = self.now - slot.run_started
+        used = core.now - slot.run_started
         job.burst_remaining -= used
         if job.burst_remaining <= 1e-12:
             job.burst_remaining = 0.0
-            self._stop_current(slot, used)
-            self._advance(job, from_slot=slot)
-            self._schedule_next(slot)
+            core.stop_job(slot, used)
+            self.advance(job, from_slot=slot)
+            core.schedule_next(slot)
         else:
             # Slice expiry: charge, requeue, pick next (paper: re-enqueue path).
-            self._stop_current(slot, used)
-            self.requeue(job)
-            self._schedule_next(slot)
+            core.stop_job(slot, used)
+            core.requeue(job)
+            core.schedule_next(slot)
 
     # ------------------------------------------------------- phase machinery
-    def _advance(self, job: Job, from_slot: Optional[Slot] = None) -> None:
+    def add_job(self, job: Job, at: float = 0.0) -> None:
+        self.core.jobs[job.jid] = job
+        self.clock.at(at, lambda: self.advance(job))
+
+    def advance(self, job: Job, from_slot: Optional[Slot] = None) -> None:
         """Drive the job's behaviour generator until it needs CPU or sleeps.
 
         Phases are advanced with ``generator.send(resume_value)`` so that
         zero-time probes (``TryLock``) can return results into the workload
         generator (spin-acquire loops, see ``core.locks.spin_acquire``).
         """
+        core = self.core
         if job.state == JobState.EXITED:
             return
         while True:
@@ -338,23 +183,23 @@ class SchedKernel:
                     # order / fair-server window all apply here).
                     job.state = JobState.RUNNABLE
                     job.wakeup_time = -1.0
-                    self.requeue(job)
-                    self._schedule_next(from_slot)
+                    core.requeue(job)
+                    core.schedule_next(from_slot)
                 else:
-                    self.wake(job)
+                    core.wake(job)
                 return
             elif isinstance(ph, Block):
                 job.state = JobState.BLOCKED
-                self.clock.after(ph.duration, lambda j=job: self._advance(j))
+                self.clock.after(ph.duration, lambda j=job: self.advance(j))
                 return
             elif isinstance(ph, TryLock):
                 job.resume_value = ph.lock.try_acquire(job)
             elif isinstance(ph, RequestBegin):
-                job.request_started_at = self.now
+                job.request_started_at = core.now
             elif isinstance(ph, RequestEnd):
                 job.completed_requests += 1
-                self.metrics.record_request(
-                    job.group.name, self.now - job.request_started_at, self.now)
+                core.metrics.record_request(
+                    job.group.name, core.now - job.request_started_at, core.now)
             elif isinstance(ph, AcquireLock):
                 lock: SimLock = ph.lock
                 if lock.try_acquire(job):
@@ -367,12 +212,12 @@ class SchedKernel:
                 woken = ph.lock.release(job)
                 if woken is not None:
                     woken.resume_value = True
-                    self._advance(woken)             # hand-off: waiter proceeds
+                    self.advance(woken)              # hand-off: waiter proceeds
             elif isinstance(ph, PanicExit):
                 job.panic = True
-                self.metrics.panics.append(job.name)
-                if self.on_panic is not None:
-                    self.on_panic(job)
+                core.metrics.panics.append(job.name)
+                if core.on_panic is not None:
+                    core.on_panic(job)
                 self._exit(job)
                 return
             elif isinstance(ph, Exit):
@@ -386,37 +231,50 @@ class SchedKernel:
         for lock in list(job.held_locks):
             lock.release(job)
 
-    # ----------------------------------------------------------- hint wiring
-    def _hint_boost(self, job: Job) -> None:
-        self.policy.on_boost(job)
 
-    def _hint_unboost(self, job: Job) -> None:
-        self.policy.on_unboost(job)
+class SchedKernel(SchedCore):
+    """Sim-mode scheduling kernel: a thin facade over :class:`SchedCore`
+    with a :class:`SimExecutor` backend."""
 
-    # ----------------------------------------------------------- elasticity
-    def add_slot(self) -> Slot:
-        slot = Slot(len(self.slots))
-        self.slots.append(slot)
-        self.clock.after(0.0, lambda: self._schedule_next(slot))
-        return slot
+    def __init__(
+        self,
+        n_slots: int,
+        policy: Policy,
+        hints: Optional[HintTable] = None,
+        metrics: Optional[Metrics] = None,
+        kick_latency: float = 0.0,
+        hints_enabled: bool = True,
+        seed: int = 0,
+    ):
+        super().__init__(n_slots, policy, SimExecutor(), hints=hints,
+                         metrics=metrics, kick_latency=kick_latency,
+                         hints_enabled=hints_enabled)
+        self._rng_state = seed or 1
 
-    def drain_slot(self, sid: int) -> None:
-        """Take a slot offline: requeue its work elsewhere (node failure /
-        elastic downscale)."""
-        slot = self.slots[sid]
-        slot.online = False
-        if slot.current is not None:
-            self._preempt(slot)
-        while True:
-            job = slot.local_dsq.pop_front()
-            if job is None:
-                break
-            self.requeue(job)
+    @property
+    def clock(self) -> SimClock:
+        return self.executor.clock
 
-    # ------------------------------------------------------------- periodic
-    def _schedule_periodic(self) -> None:
-        interval = self.policy.periodic_interval
-        def tick() -> None:
-            self.policy.periodic()
-            self.clock.after(interval, tick)
-        self.clock.after(interval, tick)
+    def create_lock(self, name: str = "") -> SimLock:
+        return SimLock(self, name)
+
+    # ------------------------------------------------------------ job control
+    def add_job(self, job: Job, at: float = 0.0) -> None:
+        self.executor.add_job(job, at)
+
+    def run(self, horizon: float, warmup: float = 0.0) -> Metrics:
+        self.metrics.window_start = warmup
+        self.metrics.window_end = horizon
+        self.clock.run_until(horizon)
+        self._settle_accounting()
+        return self.metrics
+
+    def _settle_accounting(self) -> None:
+        """Charge partially-elapsed runs at the horizon so utilization sums."""
+        for slot in self.slots:
+            job = slot.current
+            if job is not None:
+                used = self.now - slot.run_started
+                if used > 0:
+                    self.metrics.record_run(slot.sid, job.kind, job.group.name, used, self.now)
+                    slot.run_started = self.now

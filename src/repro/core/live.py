@@ -1,12 +1,19 @@
-"""Live-mode scheduling kernel: the same Policy objects as the simulator,
-driving real (JAX) work on worker threads.
+"""Live-mode execution backend: the same SchedCore and Policy objects as
+the simulator, driving real (JAX) work on worker threads.
 
-A *slot* here is a device execution context served by one host thread; jobs
-provide ``run_chunk(budget_s) -> "done" | "blocked" | "yield"`` executing one
-bounded chunk of real work (a training microbatch, a batched decode step, a
-prefill chunk). Preemption is chunk-granular (DESIGN.md section 2): a kick
-sets ``slot.preempt`` which long chunks may poll, and the scheduler simply
-does not re-dispatch background work while time-sensitive work is queued.
+The shared scheduling machinery lives in :mod:`repro.core.base`
+(:class:`~repro.core.base.SchedCore`); this module contributes the
+**thread** backend (DESIGN.md section 2):
+
+* :class:`ThreadExecutor` -- one host worker thread per slot; jobs provide
+  ``run_chunk(budget_s) -> "done" | "blocked" | "yield"`` executing one
+  bounded chunk of real work (a training microbatch, a batched decode step,
+  a prefill chunk).  Preemption is chunk-granular: a kick records a
+  per-slot preempt request which long chunks may poll via
+  :meth:`LiveKernel.preempt_requested`, and the scheduler simply does not
+  re-dispatch background work while time-sensitive work is queued.
+* :class:`LiveKernel` -- the live facade over :class:`SchedCore`
+  (``start`` / ``stop`` / ``create_lock``).
 
 Locks: :class:`LiveLock` is the engine-lock analogue of ``SimLock`` -- a
 real ``threading.Lock`` instrumented with HintTable reporting, so the
@@ -17,148 +24,178 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-from typing import Callable, Optional
+from contextlib import contextmanager
+from typing import Callable, ContextManager, Optional
 
+from .base import Executor, Policy, SchedCore, Slot
 from .hints import HintTable
-from .kernel import Policy, Slot
-from .metrics import Metrics
-from .task import Job, JobState, Tier, WorkloadGroup
-from .dsq import GroupDSQ
+from .task import Job, JobState
 
 _live_ids = itertools.count(1)
 
 
 class LiveJob(Job):
-    def __init__(self, group: WorkloadGroup, run_chunk: Callable[[float], str],
+    def __init__(self, group, run_chunk: Callable[[float], str],
                  name: str = "", kind: str = "live"):
         super().__init__(group, behavior=None, name=name or f"live{next(_live_ids)}",
                          kind=kind)
         self._run_chunk = run_chunk
 
 
-class LiveKernel:
-    """Thread-based kernel exposing the attribute surface policies use."""
+class ThreadExecutor(Executor):
+    """Worker-thread backend: real wall-clock time, chunk-granular dispatch.
 
-    def __init__(self, n_slots: int, policy: Policy,
-                 hints: Optional[HintTable] = None, hints_enabled: bool = True):
-        self.slots = [Slot(i) for i in range(n_slots)]
-        for s in self.slots:
-            s.preempt = False
-        self.policy = policy
-        self.hints = hints or HintTable()
-        self.hints_enabled = hints_enabled
-        self.metrics = Metrics()
-        self.groups: dict[str, WorkloadGroup] = {}
-        self.kick_latency = 0.0
+    The mutation guard is a condition variable over a re-entrant lock, so
+    hint callbacks and nested lifecycle calls (enqueue -> kick -> ...) are
+    safe from any thread -- including worker threads already inside the
+    guard.  Exiting the guard always notifies idle workers.
+    """
+
+    def __init__(self) -> None:
         self._t0 = time.monotonic()
-        self._cond = threading.Condition()
+        self._cond = threading.Condition()       # default lock is an RLock
         self._stop = False
+        self._started = False
         self._threads: list = []
-        policy.attach(self)
-        self.hints.on_boost = lambda j: self._with_lock(self.policy.on_boost, j)
-        self.hints.on_unboost = lambda j: self._with_lock(self.policy.on_unboost, j)
+        self._timers: list = []
+        self._preempt: set[int] = set()          # sids with a pending preempt
 
-    # ------------------------------------------------------------- plumbing
+    # ---------------------------------------------------- Executor protocol
     @property
     def now(self) -> float:
         return time.monotonic() - self._t0
 
-    @property
-    def clock(self):  # pragma: no cover - compat shim
-        return self
+    def defer(self, dt: float, fn: Callable[[], None]) -> None:
+        if dt <= 0:
+            fn()
+            return
+        t = threading.Timer(dt, self._fire_deferred, args=(fn,))
+        t.daemon = True
+        with self._cond:
+            if self._stop:
+                return
+            self._timers = [x for x in self._timers if x.is_alive()]
+            self._timers.append(t)
+        t.start()
 
-    def online_slots(self) -> list:
-        return [s for s in self.slots if s.online]
+    def _fire_deferred(self, fn: Callable[[], None]) -> None:
+        with self._cond:
+            if self._stop:
+                return
+        fn()
 
-    def create_group(self, name: str, tier: Tier, weight: float = 100.0,
-                     **kw) -> WorkloadGroup:
-        g = WorkloadGroup(name, tier, weight, **kw)
-        g.dsq = GroupDSQ()
-        self.groups[name] = g
-        return g
-
-    def _with_lock(self, fn, *a):
-        # hint callbacks may fire from a thread already holding the lock
-        if self._cond._lock.locked() and threading.current_thread() in self._threads:
-            fn(*a)
-        else:
-            with self._cond:
-                fn(*a)
+    @contextmanager
+    def _guard(self):
+        with self._cond:
+            try:
+                yield
+            finally:
                 self._cond.notify_all()
 
-    # ------------------------------------------------------------- schedule
-    def wake(self, job: Job) -> None:
+    def guard(self) -> ContextManager:
+        return self._guard()
+
+    def deliver_kick(self, slot: Slot, preempt: bool) -> None:
         with self._cond:
-            job.state = JobState.RUNNABLE
-            job.wakeup_time = self.now
-            job.location = None
-            self.policy.enqueue(job, requeue=False)
+            if preempt and slot.current is not None:
+                self.core.metrics.preemptions += 1
+                self._preempt.add(slot.sid)
             self._cond.notify_all()
 
-    def requeue(self, job: Job) -> None:
-        job.state = JobState.RUNNABLE
-        job.location = None
-        self.policy.enqueue(job, requeue=True)
+    def interrupt(self, slot: Slot) -> None:
+        # Chunk-granular: the worker stops the job at the chunk boundary and
+        # the policy (which only sees online slots) migrates it elsewhere.
+        with self._cond:
+            if slot.current is not None:
+                self._preempt.add(slot.sid)
+            self._cond.notify_all()
 
-    def kick(self, slot: Slot, preempt: bool = False) -> None:
-        self.metrics.kicks += 1
-        if preempt and slot.current is not None:
-            self.metrics.preemptions += 1
-            slot.preempt = True
-        self._cond.notify_all()
+    def slot_added(self, slot: Slot) -> None:
+        with self._cond:
+            if self._started and not self._stop:
+                self._spawn_worker(slot)
+            self._cond.notify_all()
+
+    def preempt_requested(self, slot: Slot) -> bool:
+        """Chunk-granular preempt poll for long-running chunks."""
+        return slot.sid in self._preempt
 
     # -------------------------------------------------------------- workers
     def start(self) -> None:
-        for slot in self.slots:
-            t = threading.Thread(target=self._worker, args=(slot,), daemon=True)
-            self._threads.append(t)
-            t.start()
+        with self._cond:
+            self._started = True
+            for slot in self.core.slots:
+                self._spawn_worker(slot)
+
+    def _spawn_worker(self, slot: Slot) -> None:
+        t = threading.Thread(target=self._worker, args=(slot,), daemon=True)
+        self._threads.append(t)
+        t.start()
 
     def stop(self) -> None:
         with self._cond:
             self._stop = True
+            for t in self._timers:
+                t.cancel()
             self._cond.notify_all()
         for t in self._threads:
             t.join(timeout=5.0)
 
     def _worker(self, slot: Slot) -> None:
+        core = self.core
         while True:
             with self._cond:
                 while True:
                     if self._stop:
                         return
-                    job = self.policy.pick_next(slot)
-                    if job is not None:
-                        break
+                    if slot.online:
+                        core.schedule_next(slot)     # shared dispatch + start
+                        if slot.current is not None:
+                            break
                     self._cond.wait(timeout=0.05)
-                job.state = JobState.RUNNING
-                job.location = None
-                if job.wakeup_time >= 0:
-                    self.metrics.record_wakeup(job.group.name,
-                                               self.now - job.wakeup_time, self.now)
-                    job.wakeup_time = -1.0
-                job.prev_slot = slot.sid
-                slot.current = job
-                slot.preempt = False
-                budget = self.policy.task_slice(job)
+                job = slot.current
+                self._preempt.discard(slot.sid)
+                budget = slot.slice_budget
+                runner = getattr(job, "_run_chunk", None) or job.run_chunk
             t0 = time.monotonic()
             try:
-                status = job._run_chunk(budget)       # real work, no lock held
-            except Exception:                         # noqa: BLE001
+                status = runner(budget)              # real work, no lock held
+            except Exception:                        # noqa: BLE001
                 status = "done"
             used = time.monotonic() - t0
             with self._cond:
-                slot.current = None
-                self.policy.stopping(job, slot, used)
-                self.metrics.record_run(slot.sid, job.kind, job.group.name,
-                                        used, self.now)
+                core.stop_job(slot, used)            # shared stop bookkeeping
+                self._preempt.discard(slot.sid)
                 if status == "done":
                     job.state = JobState.EXITED
                 elif status == "blocked":
                     job.state = JobState.BLOCKED
                 else:
-                    self.requeue(job)
+                    core.requeue(job)
                 self._cond.notify_all()
+
+
+class LiveKernel(SchedCore):
+    """Thread-based kernel: a thin facade over :class:`SchedCore` with a
+    :class:`ThreadExecutor` backend."""
+
+    def __init__(self, n_slots: int, policy: Policy,
+                 hints: Optional[HintTable] = None, hints_enabled: bool = True,
+                 kick_latency: float = 0.0):
+        super().__init__(n_slots, policy, ThreadExecutor(), hints=hints,
+                         kick_latency=kick_latency, hints_enabled=hints_enabled)
+
+    def start(self) -> None:
+        self.executor.start()
+
+    def stop(self) -> None:
+        self.executor.stop()
+
+    def create_lock(self, name: str = "") -> "LiveLock":
+        return LiveLock(self, name)
+
+    def preempt_requested(self, slot: Slot) -> bool:
+        return self.executor.preempt_requested(slot)
 
 
 class LiveLock:
@@ -166,7 +203,7 @@ class LiveLock:
 
     _ids = itertools.count(10_000)
 
-    def __init__(self, kernel: LiveKernel, name: str = ""):
+    def __init__(self, kernel: SchedCore, name: str = ""):
         self.lock_id = next(self._ids)
         self.name = name or f"livelock{self.lock_id}"
         self.kernel = kernel

@@ -26,7 +26,7 @@ from typing import TYPE_CHECKING, Iterator, Optional
 from .task import Block, Burst, Job, PanicExit, TryLock
 
 if TYPE_CHECKING:  # pragma: no cover
-    from .kernel import SchedKernel
+    from .base import SchedCore
 
 _lock_ids = itertools.count(1)
 
@@ -41,7 +41,7 @@ POLL_COST = 5e-6          # CPU cost of one spin/poll round
 class SimLock:
     """A sim-mode engine lock, created via ``kernel.create_lock``."""
 
-    def __init__(self, kernel: "SchedKernel", name: str = ""):
+    def __init__(self, kernel: "SchedCore", name: str = ""):
         self.lock_id = next(_lock_ids)
         self.name = name or f"lock{self.lock_id}"
         self.kernel = kernel

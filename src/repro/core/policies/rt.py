@@ -29,8 +29,8 @@ from __future__ import annotations
 
 import itertools
 
+from ..base import Policy, Slot
 from ..dsq import GroupDSQ
-from ..kernel import Policy, Slot
 from ..task import Job, JobState, Tier
 from ..vruntime import WEIGHT_SCALE
 
@@ -51,6 +51,9 @@ class RTPolicy(Policy):
         self.fair_queue = GroupDSQ()          # global fair rq, keyed by vruntime
         self.fair_vmin = 0.0
         self.rt_since: dict[int, float] = {}  # sid -> RT usage since last fair grant
+        # sid -> fair-server window end: policy-private per-slot state (was a
+        # field bolted onto Slot; the core's Slot is now policy-agnostic).
+        self.fair_until: dict[int, float] = {}
 
     # ------------------------------------------------------------------
     def _is_rt(self, job: Job) -> bool:
@@ -61,6 +64,9 @@ class RTPolicy(Policy):
             return False
         aff = job.group.slot_affinity
         return aff is None or slot.sid in aff
+
+    def _fair_served_until(self, slot: Slot) -> float:
+        return self.fair_until.get(slot.sid, 0.0)
 
     def task_slice(self, job: Job) -> float:
         if self._is_rt(job):
@@ -100,7 +106,7 @@ class RTPolicy(Policy):
         if (prev is not None and prev.online and self._allowed(job, prev)
                 and (prev.current is None or
                      (not self._is_rt(prev.current)
-                      and kernel.now >= prev.dl_served_until))):
+                      and kernel.now >= self._fair_served_until(prev)))):
             slot = prev
             preempt = prev.current is not None
         else:
@@ -128,7 +134,7 @@ class RTPolicy(Policy):
         for s in kernel.online_slots():
             cur = s.current
             if (cur is not None and not self._is_rt(cur) and self._allowed(job, s)
-                    and kernel.now >= s.dl_served_until):
+                    and kernel.now >= self._fair_served_until(s)):
                 return s
         return None
 
@@ -148,7 +154,7 @@ class RTPolicy(Policy):
     # -------------------------------------------------------------- dispatch
     def pick_next(self, slot: Slot):
         """During a fair-server window the slot serves the fair class first."""
-        if self.kernel.now < slot.dl_served_until:
+        if self.kernel.now < self._fair_served_until(slot):
             job = slot.local_dsq.pop_first_where(
                 lambda j: not self._is_rt(j) and j.state == JobState.RUNNABLE)
             if job is None:
@@ -161,7 +167,7 @@ class RTPolicy(Policy):
 
     def dispatch(self, slot: Slot) -> None:
         kernel = self.kernel
-        serving_fair = kernel.now < slot.dl_served_until
+        serving_fair = kernel.now < self._fair_served_until(slot)
         if not serving_fair:
             # pull_rt_task analogue: steal a queued, pushable RT task from an
             # overloaded slot before dropping to fair work.
@@ -188,9 +194,9 @@ class RTPolicy(Policy):
 
     # ------------------------------------------------------------- charging
     def running(self, job: Job, slot: Slot) -> None:
-        if not self._is_rt(job) and self.kernel.now < slot.dl_served_until:
+        if not self._is_rt(job) and self.kernel.now < self._fair_served_until(slot):
             slot.slice_budget = min(slot.slice_budget,
-                                    max(slot.dl_served_until - self.kernel.now, 1e-4))
+                                    max(self._fair_served_until(slot) - self.kernel.now, 1e-4))
 
     def stopping(self, job: Job, slot: Slot, used: float) -> None:
         job.total_cpu += used
@@ -215,13 +221,13 @@ class RTPolicy(Policy):
     def _check_grant(self, slot: Slot) -> bool:
         if self.rt_since.get(slot.sid, 0.0) < RT_RUNTIME_FRAC * RT_WINDOW:
             return False
-        if self.kernel.now < slot.dl_served_until:
+        if self.kernel.now < self._fair_served_until(slot):
             return False
         if not any(j.state == JobState.RUNNABLE and self._allowed(j, slot)
                    for j in self.fair_queue.jobs()):
             return False
         self.rt_since[slot.sid] = 0.0
-        slot.dl_served_until = self.kernel.now + FAIR_BUDGET
+        self.fair_until[slot.sid] = self.kernel.now + FAIR_BUDGET
         return True
 
     def _maybe_fair_serve(self) -> None:

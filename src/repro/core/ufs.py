@@ -19,7 +19,7 @@ from __future__ import annotations
 from typing import Optional
 
 from . import vruntime as vrt
-from .kernel import Policy, Slot
+from .base import Policy, Slot
 from .runnable_tree import RunnableTree
 from .task import Job, JobState, Tier, WorkloadGroup
 
@@ -78,7 +78,14 @@ class UFSPolicy(Policy):
             return slot, preempt
         affinity = job.group.slot_affinity
         if affinity is not None:
-            slots = [s for s in slots if s.sid in affinity]
+            allowed = [s for s in slots if s.sid in affinity]
+            if allowed:
+                slots = allowed
+            else:
+                # The affinity mask matches no online slot (drained away or
+                # misconfigured): fall back to the full online set rather
+                # than crash the placement path.
+                affinity = None
         # 1. previous slot, if idle or running background work.
         prev = kernel.slots[job.prev_slot] if 0 <= job.prev_slot < len(kernel.slots) else None
         if prev is not None and prev.online and (affinity is None or prev.sid in affinity):

@@ -36,13 +36,17 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=12)
     ap.add_argument("--background-train", action="store_true")
     ap.add_argument("--slots", type=int, default=1)
+    ap.add_argument("--kick-latency", type=float, default=0.0,
+                    help="seconds before a kick takes effect (chunk-boundary "
+                         "model; supported by both executor backends)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = Model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
 
-    kernel = LiveKernel(args.slots, make_policy(args.policy))
+    kernel = LiveKernel(args.slots, make_policy(args.policy),
+                        kick_latency=args.kick_latency)
     engine = InferenceEngine(model, params, kernel, max_batch=4, max_len=64)
     kernel.start()
     engine.start()
@@ -87,7 +91,8 @@ def main() -> None:
     if args.background_train:
         print(f"background train steps: {box['steps']}")
     print(f"preemptions={kernel.metrics.preemptions} kicks={kernel.metrics.kicks} "
-          f"hint_writes={kernel.hints.writes}")
+          f"dispatches={kernel.metrics.dispatches} hint_writes={kernel.hints.writes} "
+          f"boosts={kernel.hints.boosts}")
 
 
 if __name__ == "__main__":

@@ -7,10 +7,17 @@ Production meshes come from ``make_production_mesh``; on this CPU container
 use --reduced (1 device). Fault tolerance: periodic async checkpoints with
 atomic commit; --resume restores the latest valid checkpoint (also after
 a simulated --fail-at crash).
+
+``--scheduled`` runs the loop through the unified scheduling core
+(DESIGN.md section 5): microbatch steps become a time-sensitive job on a
+``LiveKernel`` slot and each checkpoint write a background-tier job on the
+same slot machinery, so saves only use slack and never delay a step --
+the same SchedCore/UFS objects the simulator and the serving driver use.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -43,6 +50,9 @@ def main() -> None:
                     help="simulate a crash after N steps (fault-tolerance demo)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--scheduled", action="store_true",
+                    help="run the loop under a LiveKernel: steps are a "
+                         "time-sensitive job, checkpoint saves background jobs")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -61,7 +71,10 @@ def main() -> None:
     start_step = 0
     mgr = None
     if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir, keep_n=3, async_save=True)
+        # Scheduled mode replaces the ad-hoc save thread with background
+        # jobs, so the save itself is the unit of scheduled work.
+        mgr = CheckpointManager(args.ckpt_dir, keep_n=3,
+                                async_save=not args.scheduled)
         if args.resume:
             got = mgr.restore_latest(state)
             if got[0] is not None:
@@ -70,8 +83,8 @@ def main() -> None:
 
     step_fn = jax.jit(T.make_train_step(model, tcfg))
     src = SyntheticTokens(cfg.vocab_size, seed=args.seed)
-    t0 = time.time()
-    for step in range(start_step, args.steps):
+
+    def make_batch(step: int) -> dict:
         raw = src.batch(step, 0, args.batch, args.seq)
         batch = {k: jnp.asarray(v) for k, v in raw.items()}
         if cfg.encoder_layers:
@@ -79,23 +92,100 @@ def main() -> None:
         if cfg.vision_tokens:
             batch["vision_embeds"] = jnp.zeros(
                 (args.batch, cfg.vision_tokens, cfg.d_model))
-        state, metrics = step_fn(state, batch)
+        return batch
+
+    t0 = time.time()
+    if args.scheduled:
+        state = _run_scheduled(args, state, start_step, step_fn, make_batch,
+                               mgr, t0)
+    else:
+        for step in range(start_step, args.steps):
+            state, metrics = step_fn(state, make_batch(step))
+            if (step + 1) % args.log_every == 0 or step == start_step:
+                loss = float(metrics["loss"])
+                rate = (step + 1 - start_step) * args.batch * args.seq / (time.time() - t0)
+                print(f"step {step+1:5d} loss {loss:7.4f} "
+                      f"lr {float(metrics['lr']):.2e} tok/s {rate:,.0f}",
+                      flush=True)
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, state)
+            if args.fail_at is not None and step + 1 >= args.fail_at:
+                if mgr:
+                    mgr.wait()
+                raise SystemExit(f"simulated failure at step {step+1} "
+                                 f"(restart with --resume)")
+    if mgr:
+        mgr.save(args.steps, state)
+        mgr.wait()
+    print("done")
+
+
+def _run_scheduled(args, state, start_step, step_fn, make_batch, mgr, t0):
+    """Drive the training loop through the unified scheduling core.
+
+    One LiveKernel slot, UFS policy: the step loop is a time-sensitive job
+    (one chunk = one microbatch), each checkpoint save a background-tier
+    job on the same slot.  Saves therefore run only in the slack between
+    steps and are preempted at chunk granularity if steps are queued --
+    the paper's mixed-workload story applied to the training driver itself.
+    """
+    from ..core import Tier
+    from ..core.live import LiveJob, LiveKernel
+    from ..core.policies import make_policy
+
+    kernel = LiveKernel(1, make_policy("ufs"))
+    train_g = kernel.create_group("train", Tier.TIME_SENSITIVE, 10_000.0)
+    ckpt_g = kernel.create_group("ckpt", Tier.BACKGROUND, 1.0)
+    box = {"state": state, "step": start_step, "failed": False,
+           "saves_queued": 0, "saves_done": 0}
+    done = threading.Event()
+
+    def save_chunk(step: int, snap) -> str:
+        mgr.save(step, snap)
+        box["saves_done"] += 1
+        return "done"
+
+    def train_chunk(budget: float) -> str:
+        step = box["step"]
+        if step >= args.steps:
+            done.set()
+            return "done"
+        box["state"], metrics = step_fn(box["state"], make_batch(step))
+        box["step"] = step + 1
         if (step + 1) % args.log_every == 0 or step == start_step:
             loss = float(metrics["loss"])
             rate = (step + 1 - start_step) * args.batch * args.seq / (time.time() - t0)
             print(f"step {step+1:5d} loss {loss:7.4f} "
                   f"lr {float(metrics['lr']):.2e} tok/s {rate:,.0f}", flush=True)
         if mgr and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step + 1, state)
+            snap = box["state"]
+            box["saves_queued"] += 1
+            kernel.wake(LiveJob(ckpt_g,
+                                lambda budget, s=step + 1, st=snap: save_chunk(s, st),
+                                name=f"ckpt-{step+1}", kind="bound"))
         if args.fail_at is not None and step + 1 >= args.fail_at:
-            if mgr:
-                mgr.wait()
-            raise SystemExit(f"simulated failure at step {step+1} "
-                             f"(restart with --resume)")
-    if mgr:
-        mgr.save(args.steps, state)
-        mgr.wait()
-    print("done")
+            box["failed"] = True
+            done.set()
+            return "done"
+        return "yield"
+
+    kernel.start()
+    kernel.wake(LiveJob(train_g, train_chunk, name="train-loop", kind="bound"))
+    done.wait()
+    # Under UFS a 1-slot kernel gives background saves no slack while steps
+    # are queued; drain queued saves (now pure slack) before stopping.
+    deadline = time.monotonic() + 30.0
+    while box["saves_done"] < box["saves_queued"] and time.monotonic() < deadline:
+        time.sleep(0.01)
+    kernel.stop()
+    print(f"scheduled: dispatches={kernel.metrics.dispatches} "
+          f"preemptions={kernel.metrics.preemptions}")
+    if box["failed"]:
+        if mgr:
+            mgr.wait()
+        raise SystemExit(f"simulated failure at step {box['step']} "
+                         f"(restart with --resume)")
+    return box["state"]
 
 
 if __name__ == "__main__":

@@ -13,6 +13,17 @@ emits bounded *work items* to the scheduler:
 
 Requests carry ``tier``/``weight`` annotations -- the client-facing analogue
 of the paper's ``SET task_tier/task_weight`` SQL interface.
+
+Locking discipline (one lock, one rule): ``self._lock`` guards **all**
+mutable engine state -- ``pending``, ``active``, ``lengths``, ``completed``
+and every read-modify-write of the pooled ``caches`` pytree.  The decode
+step and the admit path hold it for their whole read->compute->write cycle
+(a batched decode replaces every cache row, so a concurrent slot write
+would be lost otherwise); bulk prefill computes its batch-1 cache *outside*
+the lock (it reads only immutable params and the request's own prompt) and
+takes the lock only to merge the result into the pool.  ``CacheSlotPool``
+has its own hint-instrumented ``LiveLock`` and is never held while waiting
+on ``self._lock``, so lock order is acyclic.
 """
 from __future__ import annotations
 
@@ -107,6 +118,9 @@ class InferenceEngine:
         slot = self.pool.alloc(self._job, str(req.rid))
         if slot is None:
             return "yield"                   # no slot free yet: retry later
+        # Prefill outside the engine lock: it reads only immutable state
+        # (params, the request's own prompt). The slot is reserved, so no
+        # other writer targets this cache row until we publish it below.
         plen = len(req.prompt)
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
         logits, caches1 = self.model.prefill(self.params, batch, self.max_len)
@@ -122,20 +136,16 @@ class InferenceEngine:
         return "done"
 
     # ------------------------------------------------------------ mechanics
-    def _admit(self) -> None:
+    def _admit_locked(self) -> None:
         """Admit pending requests into free cache slots (prefill inline --
         prompts are short in the demo; long prompts become chunked prefill
-        jobs in examples/mixed_serving.py)."""
-        while self.pending and self.pool.free:
-            with self._lock:
-                if not self.pending:
-                    return
-                req = self.pending.pop(0)
+        jobs in examples/mixed_serving.py). Caller holds ``self._lock``."""
+        while self.pending:
+            req = self.pending[0]
             slot = self.pool.alloc(self._job, str(req.rid))
             if slot is None:
-                with self._lock:
-                    self.pending.insert(0, req)
-                return
+                return                       # pool exhausted: retry next chunk
+            self.pending.pop(0)
             # single-request prefill into the pooled cache at `slot`
             plen = len(req.prompt)
             batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
@@ -148,32 +158,35 @@ class InferenceEngine:
             self.active[slot] = req
 
     def _decode_chunk(self, budget: float) -> str:
-        """One bounded chunk: admit + one batched decode step."""
-        self._admit()
-        if not self.active:
-            return "blocked" if self._running else "done"
-        pos = int(self.lengths.max())
-        toks = np.zeros((self.max_batch, 1), np.int32)
-        for slot, req in self.active.items():
-            toks[slot, 0] = req.tokens[-1]
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           jnp.asarray(toks), pos)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        now = time.monotonic()
-        finished = []
-        for slot, req in list(self.active.items()):
-            req.tokens.append(int(nxt[slot]))
-            self.lengths[slot] += 1
-            if len(req.tokens) >= req.max_new_tokens or self.lengths[slot] >= self.max_len - 1:
-                req.finished = now
-                finished.append(slot)
-        for slot in finished:
-            req = self.active.pop(slot)
-            self.completed.append(req)
-            req.done_event.set()
-            self.pool.release(self._job, slot)
-            self.lengths[slot] = 0
-        return "yield" if (self.active or self.pending or self._running) else "done"
+        """One bounded chunk: admit + one batched decode step.  Holds the
+        engine lock for the whole read->decode->write cycle (the decode
+        replaces every cache row, see the locking discipline above)."""
+        with self._lock:
+            self._admit_locked()
+            if not self.active:
+                return "blocked" if self._running else "done"
+            pos = int(self.lengths.max())
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            for slot, req in self.active.items():
+                toks[slot, 0] = req.tokens[-1]
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               jnp.asarray(toks), pos)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            now = time.monotonic()
+            finished = []
+            for slot, req in list(self.active.items()):
+                req.tokens.append(int(nxt[slot]))
+                self.lengths[slot] += 1
+                if len(req.tokens) >= req.max_new_tokens or self.lengths[slot] >= self.max_len - 1:
+                    req.finished = now
+                    finished.append(slot)
+            for slot in finished:
+                req = self.active.pop(slot)
+                self.completed.append(req)
+                req.done_event.set()
+                self.pool.release(self._job, slot)
+                self.lengths[slot] = 0
+            return "yield" if (self.active or self.pending or self._running) else "done"
 
 
 def _write_slot(pool_caches, single_caches, slot: int):

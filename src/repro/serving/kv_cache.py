@@ -11,11 +11,12 @@ from __future__ import annotations
 
 from typing import Optional
 
-from ..core.live import LiveKernel, LiveLock
+from ..core.base import SchedCore
+from ..core.live import LiveLock
 
 
 class CacheSlotPool:
-    def __init__(self, kernel: LiveKernel, n_slots: int):
+    def __init__(self, kernel: SchedCore, n_slots: int):
         self.n = n_slots
         self.free = list(range(n_slots))
         self.lock = LiveLock(kernel, "kv-slot-allocator")

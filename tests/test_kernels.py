@@ -4,6 +4,8 @@ pure-jnp oracles in kernels/ref.py."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -69,6 +69,7 @@ def test_decode_matches_full_forward(name):
     assert rel < 2e-2
 
 
+@pytest.mark.slow
 def test_sliding_window_cache_is_ring():
     """Hymba SWA decode must agree with full forward past the window."""
     cfg = get_arch("hymba-1.5b").reduced()

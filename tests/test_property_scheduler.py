@@ -1,4 +1,7 @@
 """Property-based tests (hypothesis) on scheduler invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

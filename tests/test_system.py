@@ -5,6 +5,7 @@ import pytest
 
 from repro.core.experiment import scenario
 
+pytestmark = pytest.mark.slow    # shared 8 s sim scenarios per scheduler
 
 DUR, WARM = 8.0, 3.0
 

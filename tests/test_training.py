@@ -49,6 +49,7 @@ def test_bf16_optimizer_state_dtype():
     assert st["m"]["w"].dtype == jnp.bfloat16
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     """accum=2 over a batch == accum=1 on the same batch (linear loss avg)."""
     model, cfg = tiny_model()
