@@ -18,9 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Tier
-from repro.core.live import LiveJob, LiveKernel
-from repro.core.policies import make_policy
+from repro.core import Tier, build_kernel
+from repro.core.live import LiveJob
 
 
 def _logreg_trainer():
@@ -71,7 +70,7 @@ def run(short=False):
     rows = []
     dur = 2.0 if short else 5.0
     for pol in ("vdf", "ufs"):
-        kernel = LiveKernel(1, make_policy(pol))
+        kernel = build_kernel("live", policy=pol, n_slots=1)
         ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
         bg = kernel.create_group("bg", Tier.BACKGROUND, 1)
         ml_chunk, ml_state = _logreg_trainer()

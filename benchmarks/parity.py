@@ -7,20 +7,26 @@ the mixed run (the background job is kicked off the slot when TS work
 wakes), never in the solo run, and the TS class holds the larger CPU share
 under contention. Sim numbers are deterministic; live numbers come from
 real threads so only the ordering is comparable.
+
+Both runs capture a scheduler trace; the TraceSummary counters are diffed
+across backends -- the event schema is shared, so any lifecycle kind one
+backend emits and the other never does is a parity break (absolute counts
+are clock-dependent and never compared).
 """
 from __future__ import annotations
 
 import threading
 import time
 
-from repro.core import Job, SchedKernel, Tier, make_policy
-from repro.core.live import LiveJob, LiveKernel
+from repro.core import Job, SchedTracer, Tier, build_kernel
+from repro.core.live import LiveJob
 from repro.core.task import JobState
 from repro.core.workloads import bound_worker, bursty_worker
 
 
-def _sim_run(mixed: bool, dur: float):
-    kernel = SchedKernel(1, make_policy("ufs"), seed=7)
+def _sim_run(mixed: bool, dur: float, tracer=None):
+    kernel = build_kernel("sim", policy="ufs", n_slots=1, seed=7,
+                          tracer=tracer)
     ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
     bg = kernel.create_group("bg", Tier.BACKGROUND, 1)
     kernel.add_job(Job(ts, behavior=bursty_worker(1), name="ts0",
@@ -32,8 +38,8 @@ def _sim_run(mixed: bool, dur: float):
     return m.preemptions, m.cpu_by_group["ts"], m.cpu_by_group["bg"]
 
 
-def _live_run(mixed: bool, dur: float):
-    kernel = LiveKernel(1, make_policy("ufs"))
+def _live_run(mixed: bool, dur: float, tracer=None):
+    kernel = build_kernel("live", policy="ufs", n_slots=1, tracer=tracer)
     ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
     bg = kernel.create_group("bg", Tier.BACKGROUND, 1)
 
@@ -72,15 +78,31 @@ def run(short=False):
     sim_dur = 2.0 if short else 5.0
     live_dur = 0.5 if short else 1.5
     rows = []
+    summaries = {}
     for backend, runner, dur in (("sim", _sim_run, sim_dur),
                                  ("live", _live_run, live_dur)):
+        tracer = SchedTracer()
         t0 = time.perf_counter()
-        p_mixed, ts_cpu, bg_cpu = runner(True, dur)
+        p_mixed, ts_cpu, bg_cpu = runner(True, dur, tracer=tracer)
         p_solo, _, _ = runner(False, dur)
         us = (time.perf_counter() - t0) * 1e6
         total = (ts_cpu + bg_cpu) or 1.0
+        summaries[backend] = tracer.summary()
         rows.append((f"parity.{backend}.preempt_mixed", us, f"{p_mixed}"))
         rows.append((f"parity.{backend}.preempt_solo", us, f"{p_solo}"))
         rows.append((f"parity.{backend}.ts_share_pct", us,
                      f"{100 * ts_cpu / total:.0f}"))
+        rows.append((f"parity.{backend}.trace_events", us,
+                     f"{summaries[backend].events}"))
+        rows.append((f"parity.{backend}.trace_preempts", us,
+                     f"{summaries[backend].counts.get('preempt_slot', 0)}"))
+    # Cross-backend schema diff: kinds present in one stream and absent in
+    # the other. wake/lock kinds legitimately differ by workload shape;
+    # everything else diverging means the backends drifted.
+    diff = summaries["sim"].diff(summaries["live"])
+    diff.pop("lock_wait", None)
+    diff.pop("lock_acquire", None)
+    diff.pop("lock_release", None)
+    rows.append(("parity.trace.kind_diff", 0,
+                 ";".join(sorted(diff)) or "none"))
     return rows

@@ -20,7 +20,14 @@ def main() -> None:
                          "fig8, fig9, tab4, sec67, fig10)")
     ap.add_argument("--skip-live", action="store_true",
                     help="skip the live-JAX fig10 benchmark")
+    ap.add_argument("--trace-sample", default=None, metavar="PATH",
+                    help="also export a schema-validated Chrome trace of a "
+                         "small mixed sim run to PATH (CI artifact)")
     args = ap.parse_args()
+
+    if args.trace_sample:
+        from repro.core import trace as trace_mod
+        trace_mod.main(["--out", args.trace_sample])
 
     from . import paper_tables
     benches = list(paper_tables.ALL)

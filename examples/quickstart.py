@@ -6,7 +6,7 @@ reproducing the paper's headline numbers on your laptop.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import Job, SchedKernel, Tier, make_policy
+from repro.core import Job, Tier, build_kernel
 from repro.core.experiment import scenario
 from repro.core.workloads import burner, holder, waiter
 
@@ -23,7 +23,7 @@ print("-> UFS keeps time-sensitive throughput at SOLO level; EEVDF loses ~half."
 
 print("\n=== priority inversion (holder/waiter/burner pinned to 1 slot) ===")
 for pol, hints in (("vdf", False), ("ufs", True)):
-    k = SchedKernel(1, make_policy(pol), hints_enabled=hints)
+    k = build_kernel("sim", policy=pol, hints_enabled=hints)
     ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
     bg = k.create_group("bg", Tier.BACKGROUND, 1)
     lock = k.create_lock("spin")

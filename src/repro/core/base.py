@@ -8,7 +8,9 @@ both execution modes share (DESIGN.md section 2).  :class:`SchedCore` owns
 * the **group/job registries** (cgroup analogue, task table);
 * the **job lifecycle** -- enqueue (wake/requeue), dispatch
   (:meth:`SchedCore.schedule_next`), start/stop bookkeeping, preemption;
-* **hint -> boost wiring** (priority-inversion avoidance) and **metrics**;
+* **hint -> boost wiring** (priority-inversion avoidance), **metrics**, and
+  the **trace plane** (:mod:`repro.core.trace`): every lifecycle edge emits
+  a structured event into an optional :class:`SchedTracer`;
 
 parameterized by a narrow :class:`Executor` protocol with two backends:
 
@@ -31,6 +33,7 @@ from .dsq import GroupDSQ, LocalDSQ
 from .hints import HintTable
 from .metrics import Metrics
 from .task import Job, JobState, Tier, WorkloadGroup
+from .trace import SchedTracer
 
 DEFAULT_SLICE = 0.003  # 3 ms bounded execution interval (paper section 5.1.1)
 
@@ -93,6 +96,7 @@ class Policy(ABC):
             nxt = slot.local_dsq.pop_front()
         if nxt is None:
             self.kernel.metrics.dispatches += 1
+            self.kernel.trace("dispatch", slot=slot.sid)
             self.dispatch(slot)
             nxt = slot.local_dsq.pop_front()
             while nxt is not None and nxt.state != JobState.RUNNABLE:
@@ -197,6 +201,7 @@ class SchedCore:
         metrics: Optional[Metrics] = None,
         kick_latency: float = 0.0,
         hints_enabled: bool = True,
+        tracer: Optional[SchedTracer] = None,
     ):
         self.executor = executor
         self.slots = [Slot(i) for i in range(n_slots)]
@@ -204,6 +209,7 @@ class SchedCore:
         self.hints = hints or HintTable()
         self.hints_enabled = hints_enabled
         self.metrics = metrics or Metrics()
+        self.tracer = tracer
         self.kick_latency = kick_latency
         self.jobs: dict[int, Job] = {}
         self.groups: dict[str, WorkloadGroup] = {}
@@ -219,6 +225,15 @@ class SchedCore:
     @property
     def now(self) -> float:
         return self.executor.now
+
+    def trace(self, kind: str, *, slot: Optional[int] = None,
+              job: Optional[Job] = None, **args) -> None:
+        """Emit a lifecycle event into the tracer (no-op when untraced).
+        The timestamp comes from the executor clock, so sim and live runs
+        share one event schema under their respective time bases."""
+        tr = self.tracer
+        if tr is not None:
+            tr.emit(kind, self.executor.now, slot=slot, job=job, **args)
 
     def create_group(self, name: str, tier: Tier, weight: float = 100.0,
                      parent: Optional[WorkloadGroup] = None, **kw) -> WorkloadGroup:
@@ -240,12 +255,15 @@ class SchedCore:
             job.state = JobState.RUNNABLE
             job.wakeup_time = self.now
             job.location = None
+            self.trace("wake", job=job)
+            self.trace("enqueue", job=job, requeue=False)
             self.policy.enqueue(job, requeue=False)
 
     def requeue(self, job: Job) -> None:
         with self.executor.guard():
             job.state = JobState.RUNNABLE
             job.location = None
+            self.trace("enqueue", job=job, requeue=True)
             self.policy.enqueue(job, requeue=True)
 
     # ------------------------------------------------------------- kicks
@@ -256,6 +274,7 @@ class SchedCore:
         takes effect only once the in-flight device program retires.
         """
         self.metrics.kicks += 1
+        self.trace("kick", slot=slot.sid, preempt=preempt)
         if self.kick_latency > 0:
             self.executor.defer(self.kick_latency,
                                 lambda: self.executor.deliver_kick(slot, preempt))
@@ -287,16 +306,20 @@ class SchedCore:
         slot.current = job
         slot.run_started = self.now
         slot.slice_budget = self.policy.task_slice(job)
+        self.trace("start_job", slot=slot.sid, job=job)
         self.policy.running(job, slot)
 
-    def stop_job(self, slot: Slot, used: float) -> Job:
+    def stop_job(self, slot: Slot, used: float, reason: str = "stop") -> Job:
         """Shared bookkeeping when the current job stops (block / preempt /
-        slice expiry / exit); charges the policy and the metrics."""
+        slice expiry / exit); charges the policy and the metrics.
+        ``reason`` is recorded in the trace only ("complete" / "slice" /
+        "preempt" / live chunk statuses)."""
         job = slot.current
         assert job is not None
         self.executor.job_stopping(slot)         # cancel in-flight run-end event
         self.policy.stopping(job, slot, used)
         self.metrics.record_run(slot.sid, job.kind, job.group.name, used, self.now)
+        self.trace("stop_job", slot=slot.sid, job=job, used=used, reason=reason)
         slot.current = None
         return job
 
@@ -309,17 +332,21 @@ class SchedCore:
             return
         self.metrics.preemptions += 1
         used = self.now - slot.run_started
-        self.stop_job(slot, used)
+        self.trace("preempt_slot", slot=slot.sid, job=job)
+        self.stop_job(slot, used, reason="preempt")
         self.executor.job_preempted(job, slot, used)
         self.schedule_next(slot)
 
     # ----------------------------------------------------------- hint wiring
     def _hint_boost(self, job: Job) -> None:
         with self.executor.guard():
+            self.trace("boost", job=job,
+                       boost_group=job.boost_group.name if job.boost_group else "")
             self.policy.on_boost(job)
 
     def _hint_unboost(self, job: Job) -> None:
         with self.executor.guard():
+            self.trace("unboost", job=job)
             self.policy.on_unboost(job)
 
     # ----------------------------------------------------------- elasticity
@@ -327,6 +354,7 @@ class SchedCore:
         with self.executor.guard():
             slot = Slot(len(self.slots))
             self.slots.append(slot)
+            self.trace("slot_add", slot=slot.sid)
         self.executor.slot_added(slot)
         return slot
 
@@ -336,6 +364,7 @@ class SchedCore:
         with self.executor.guard():
             slot = self.slots[sid]
             slot.online = False
+            self.trace("slot_drain", slot=sid)
             if slot.current is not None:
                 self.executor.interrupt(slot)
             while True:

@@ -15,10 +15,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .kernel import SchedKernel
+from .build import build_kernel
 from .metrics import Metrics
-from .policies import make_policy
 from .task import Job, Tier
+from .trace import SchedTracer
 from . import workloads as wl
 
 HIGH_WEIGHT = 10_000.0
@@ -31,12 +31,21 @@ class MixResult:
     metrics: Metrics
     n_slots: int
     duration: float
+    _summary: Optional[dict] = field(default=None, repr=False, compare=False)
+
+    def summary(self) -> dict:
+        """The unified ``Metrics.summary`` view (computed once)."""
+        if self._summary is None:
+            self._summary = self.metrics.summary(n_slots=self.n_slots)
+        return self._summary
 
     def thr(self, group: str) -> float:
-        return self.metrics.throughput(group)
+        row = self.summary()["groups"].get(group)
+        return row["throughput"] if row else 0.0
 
     def lat(self, group: str) -> dict:
-        return self.metrics.latency_stats(group)
+        row = self.summary()["groups"].get(group)
+        return row["latency"] if row else self.metrics.latency_stats(group)
 
 
 def run_mix(
@@ -56,15 +65,18 @@ def run_mix(
     query_cpu: float = wl.QUERY_CPU,
     kick_latency: float = 0.0,
     n_rx_slots: int = 1,
+    tracer: Optional[SchedTracer] = None,
 ) -> MixResult:
     """Run one workload mix for ``duration`` seconds after ``warmup``.
 
     ``n_rx_slots`` models how many slots take network-RX interrupts (the
     wakeup source for client-driven bursty backends); wake-affine placement
-    in the VDF baseline gravitates wakees toward these slots.
+    in the VDF baseline gravitates wakees toward these slots.  Pass a
+    :class:`SchedTracer` to capture the run's scheduling events.
     """
-    kernel = SchedKernel(n_slots, make_policy(policy_name),
-                         hints_enabled=hints_enabled, kick_latency=kick_latency)
+    kernel = build_kernel("sim", policy=policy_name, n_slots=n_slots,
+                          hints_enabled=hints_enabled,
+                          kick_latency=kick_latency, tracer=tracer, seed=seed)
 
     if bursty_groups is None:
         bursty_groups = [("ts", bursty_weight, n_bursty)]

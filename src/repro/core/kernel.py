@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import warnings
 from contextlib import nullcontext
 from typing import Callable, ContextManager, Optional
 
@@ -31,6 +32,7 @@ from .base import DEFAULT_SLICE, Executor, Policy, SchedCore, Slot
 from .hints import HintTable
 from .locks import SimLock
 from .metrics import Metrics
+from .trace import SchedTracer
 from .task import (AcquireLock, Block, Burst, Exit, Job, JobState, PanicExit,
                    ReleaseLock, RequestBegin, RequestEnd, TryLock)
 
@@ -140,12 +142,12 @@ class SimExecutor(Executor):
         job.burst_remaining -= used
         if job.burst_remaining <= 1e-12:
             job.burst_remaining = 0.0
-            core.stop_job(slot, used)
+            core.stop_job(slot, used, reason="complete")
             self.advance(job, from_slot=slot)
             core.schedule_next(slot)
         else:
             # Slice expiry: charge, requeue, pick next (paper: re-enqueue path).
-            core.stop_job(slot, used)
+            core.stop_job(slot, used, reason="slice")
             core.requeue(job)
             core.schedule_next(slot)
 
@@ -234,21 +236,48 @@ class SimExecutor(Executor):
 
 class SchedKernel(SchedCore):
     """Sim-mode scheduling kernel: a thin facade over :class:`SchedCore`
-    with a :class:`SimExecutor` backend."""
+    with a :class:`SimExecutor` backend.
+
+    Shares one keyword signature with :class:`~repro.core.live.LiveKernel`
+    (``policy, n_slots, kick_latency, tracer, metrics, ...``), so
+    :func:`repro.core.build.build_kernel` is a thin mode switch.  The old
+    positional form beyond ``(n_slots, policy)`` still works but warns.
+    """
+
+    _LEGACY_POSITIONAL = ("hints", "metrics", "kick_latency",
+                          "hints_enabled", "seed")
 
     def __init__(
         self,
         n_slots: int,
         policy: Policy,
+        *legacy,
         hints: Optional[HintTable] = None,
         metrics: Optional[Metrics] = None,
         kick_latency: float = 0.0,
         hints_enabled: bool = True,
         seed: int = 0,
+        tracer: Optional[SchedTracer] = None,
     ):
+        if legacy:
+            if len(legacy) > len(self._LEGACY_POSITIONAL):
+                raise TypeError(
+                    f"SchedKernel takes at most "
+                    f"{2 + len(self._LEGACY_POSITIONAL)} positional arguments")
+            warnings.warn(
+                "positional SchedKernel arguments beyond (n_slots, policy) "
+                "are deprecated; pass hints/metrics/kick_latency/"
+                "hints_enabled/seed by keyword (or use build_kernel)",
+                DeprecationWarning, stacklevel=2)
+            over = dict(zip(self._LEGACY_POSITIONAL, legacy))
+            hints = over.get("hints", hints)
+            metrics = over.get("metrics", metrics)
+            kick_latency = over.get("kick_latency", kick_latency)
+            hints_enabled = over.get("hints_enabled", hints_enabled)
+            seed = over.get("seed", seed)
         super().__init__(n_slots, policy, SimExecutor(), hints=hints,
                          metrics=metrics, kick_latency=kick_latency,
-                         hints_enabled=hints_enabled)
+                         hints_enabled=hints_enabled, tracer=tracer)
         self._rng_state = seed or 1
 
     @property

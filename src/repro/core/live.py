@@ -24,12 +24,15 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import warnings
 from contextlib import contextmanager
 from typing import Callable, ContextManager, Optional
 
 from .base import Executor, Policy, SchedCore, Slot
 from .hints import HintTable
+from .metrics import Metrics
 from .task import Job, JobState
+from .trace import SchedTracer
 
 _live_ids = itertools.count(1)
 
@@ -99,6 +102,8 @@ class ThreadExecutor(Executor):
         with self._cond:
             if preempt and slot.current is not None:
                 self.core.metrics.preemptions += 1
+                self.core.trace("preempt_slot", slot=slot.sid,
+                                job=slot.current)
                 self._preempt.add(slot.sid)
             self._cond.notify_all()
 
@@ -164,7 +169,7 @@ class ThreadExecutor(Executor):
                 status = "done"
             used = time.monotonic() - t0
             with self._cond:
-                core.stop_job(slot, used)            # shared stop bookkeeping
+                core.stop_job(slot, used, reason=status)  # shared stop bookkeeping
                 self._preempt.discard(slot.sid)
                 if status == "done":
                     job.state = JobState.EXITED
@@ -177,13 +182,43 @@ class ThreadExecutor(Executor):
 
 class LiveKernel(SchedCore):
     """Thread-based kernel: a thin facade over :class:`SchedCore` with a
-    :class:`ThreadExecutor` backend."""
+    :class:`ThreadExecutor` backend.
 
-    def __init__(self, n_slots: int, policy: Policy,
-                 hints: Optional[HintTable] = None, hints_enabled: bool = True,
-                 kick_latency: float = 0.0):
+    Shares one keyword signature with :class:`~repro.core.kernel.SchedKernel`
+    (``policy, n_slots, kick_latency, tracer, metrics, ...``) so
+    :func:`repro.core.build.build_kernel` is a thin mode switch; ``seed`` is
+    accepted for signature parity and unused (real threads, real clock).
+    The old positional form beyond ``(n_slots, policy)`` still works but
+    warns.
+    """
+
+    _LEGACY_POSITIONAL = ("hints", "hints_enabled", "kick_latency")
+
+    def __init__(self, n_slots: int, policy: Policy, *legacy,
+                 hints: Optional[HintTable] = None,
+                 metrics: Optional[Metrics] = None,
+                 kick_latency: float = 0.0,
+                 hints_enabled: bool = True,
+                 seed: int = 0,
+                 tracer: Optional[SchedTracer] = None):
+        if legacy:
+            if len(legacy) > len(self._LEGACY_POSITIONAL):
+                raise TypeError(
+                    f"LiveKernel takes at most "
+                    f"{2 + len(self._LEGACY_POSITIONAL)} positional arguments")
+            warnings.warn(
+                "positional LiveKernel arguments beyond (n_slots, policy) "
+                "are deprecated; pass hints/hints_enabled/kick_latency by "
+                "keyword (or use build_kernel)",
+                DeprecationWarning, stacklevel=2)
+            over = dict(zip(self._LEGACY_POSITIONAL, legacy))
+            hints = over.get("hints", hints)
+            hints_enabled = over.get("hints_enabled", hints_enabled)
+            kick_latency = over.get("kick_latency", kick_latency)
+        del seed                                   # parity-only, no sim RNG
         super().__init__(n_slots, policy, ThreadExecutor(), hints=hints,
-                         kick_latency=kick_latency, hints_enabled=hints_enabled)
+                         metrics=metrics, kick_latency=kick_latency,
+                         hints_enabled=hints_enabled, tracer=tracer)
 
     def start(self) -> None:
         self.executor.start()
@@ -212,6 +247,11 @@ class LiveLock:
 
     def acquire(self, job: Job, timeout: float = 30.0) -> bool:
         if not self._lock.acquire(blocking=False):
+            holder = self.holder
+            self.kernel.trace(
+                "lock_wait", job=job, lock=self.name, lock_id=self.lock_id,
+                holder=holder.name if holder else "",
+                holder_jid=holder.jid if holder else -1)
             if self.kernel.hints_enabled:
                 self.kernel.hints.report_wait_start(job, self.lock_id)
             ok = self._lock.acquire(timeout=timeout)
@@ -219,6 +259,8 @@ class LiveLock:
                 return False
         self.holder = job
         job.held_locks.add(self)
+        self.kernel.trace("lock_acquire", job=job, lock=self.name,
+                          lock_id=self.lock_id)
         if self.kernel.hints_enabled:
             self.kernel.hints.report_wait_end(job, self.lock_id)
             self.kernel.hints.report_lock_acquired(job, self.lock_id)
@@ -227,6 +269,8 @@ class LiveLock:
     def release(self, job: Job) -> None:
         self.holder = None
         job.held_locks.discard(self)
+        self.kernel.trace("lock_release", job=job, lock=self.name,
+                          lock_id=self.lock_id)
         if self.kernel.hints_enabled:
             self.kernel.hints.report_lock_released(job, self.lock_id)
         self._lock.release()

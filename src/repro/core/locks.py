@@ -54,6 +54,9 @@ class SimLock:
         if self.holder is None:
             self._grant(job)
             return True
+        self.kernel.trace("lock_wait", job=job, lock=self.name,
+                          lock_id=self.lock_id, holder=self.holder.name,
+                          holder_jid=self.holder.jid)
         if self.kernel.hints_enabled:
             self.kernel.hints.report_wait_start(job, self.lock_id)
         return False
@@ -62,6 +65,8 @@ class SimLock:
         self.holder = job
         job.held_locks.add(self)
         self.acquired_at[job.jid] = self.kernel.now
+        self.kernel.trace("lock_acquire", job=job, lock=self.name,
+                          lock_id=self.lock_id)
         if self.kernel.hints_enabled:
             self.kernel.hints.report_wait_end(job, self.lock_id)
             self.kernel.hints.report_lock_acquired(job, self.lock_id)
@@ -75,6 +80,8 @@ class SimLock:
         assert self.holder is job, f"{job} releasing {self.name} it does not hold"
         self.holder = None
         job.held_locks.discard(self)
+        self.kernel.trace("lock_release", job=job, lock=self.name,
+                          lock_id=self.lock_id)
         if self.kernel.hints_enabled:
             self.kernel.hints.report_lock_released(job, self.lock_id)
         if self.parked:

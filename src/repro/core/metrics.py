@@ -36,9 +36,16 @@ class Metrics:
 
     # ------------------------------------------------------------------
     def record_run(self, slot_id: int, kind: str, group: str, dur: float, t: float) -> None:
-        lo = max(self.window_start, t - dur)
-        hi = t if self.window_end == 0.0 else min(t, self.window_end)
-        d = max(0.0, hi - lo)
+        """Charge a run ending at ``t`` of length ``dur``, clipped to the
+        measurement window.  Both ends are clamped symmetrically into
+        [window_start, window_end] so a run straddling either window edge
+        contributes exactly its in-window portion (and never a negative
+        span): the old one-sided ``min(t, window_end)`` could place ``hi``
+        before ``lo`` and silently drop the run."""
+        end = self.window_end if self.window_end > 0.0 else float("inf")
+        lo = min(max(t - dur, self.window_start), end)
+        hi = min(max(t, self.window_start), end)
+        d = hi - lo
         if d <= 0.0:
             return
         self.slot_busy[(slot_id, kind)] += d
@@ -83,3 +90,53 @@ class Metrics:
         u = self.slot_utilization(kind, n_slots)
         mean = sum(u) / len(u) if u else 0.0
         return (max(u) / mean) if mean > 0 else float("nan")
+
+    def wakeup_stats(self, group: str) -> dict:
+        """Wakeup-latency distribution for ``group`` (wake -> first start)."""
+        w = self.wakeup_latency.get(group, [])
+        if not w:
+            return {"mean": float("nan"), "p95": float("nan"),
+                    "max": float("nan"), "n": 0}
+        return {"mean": sum(w) / len(w), "p95": percentile(w, 95),
+                "max": max(w), "n": len(w)}
+
+    # ------------------------------------------------------------------
+    def summary(self, groups: Optional[list] = None,
+                n_slots: Optional[int] = None) -> dict:
+        """The one read surface for consumers: a nested dict of everything
+        above.  ``experiment.MixResult``, ``benchmarks``, the launch
+        drivers, and ``KernelReport`` all read this instead of assembling
+        their own percentile dicts.
+
+        ``groups`` defaults to every group seen; pass an explicit list to
+        include groups with no activity.  ``n_slots`` adds the per-slot
+        utilization block (Figure 2)."""
+        if groups is None:
+            groups = sorted(set(self.completed) | set(self.request_latency)
+                            | set(self.cpu_by_group) | set(self.wakeup_latency))
+        out = {
+            "window": {"start": self.window_start, "end": self.window_end,
+                       "duration": max(0.0, self.window_end - self.window_start)},
+            "counters": {"preemptions": self.preemptions, "kicks": self.kicks,
+                         "dispatches": self.dispatches,
+                         "lb_migrations": self.lb_migrations,
+                         "panics": list(self.panics)},
+            "groups": {
+                g: {"completed": self.completed.get(g, 0),
+                    "throughput": self.throughput(g),
+                    "cpu_s": self.cpu_by_group.get(g, 0.0),
+                    "latency": self.latency_stats(g),
+                    "wakeup": self.wakeup_stats(g)}
+                for g in groups
+            },
+        }
+        if n_slots is not None:
+            kinds = sorted({k for (_, k) in self.slot_busy})
+            out["slots"] = {
+                "n": n_slots,
+                "busy_by_kind": {k: self.slot_utilization(k, n_slots)
+                                 for k in kinds},
+                "skew_by_kind": {k: self.slot_skew(k, n_slots)
+                                 for k in kinds},
+            }
+        return out

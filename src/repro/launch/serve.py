@@ -18,9 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import get_arch
-from ..core import Tier
-from ..core.live import LiveJob, LiveKernel
-from ..core.policies import make_policy
+from ..core import (KernelReport, Tier, build_kernel, percentile,
+                    write_chrome_trace)
+from ..core.live import LiveJob
 from ..models.transformer import Model
 from ..serving.engine import InferenceEngine, Request
 from ..training import optimizer as opt
@@ -39,14 +39,20 @@ def main() -> None:
     ap.add_argument("--kick-latency", type=float, default=0.0,
                     help="seconds before a kick takes effect (chunk-boundary "
                          "model; supported by both executor backends)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace JSON of the run (open at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--report-out", default=None,
+                    help="write the KernelReport JSON to this path")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = Model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
 
-    kernel = LiveKernel(args.slots, make_policy(args.policy),
-                        kick_latency=args.kick_latency)
+    kernel = build_kernel("live", policy=args.policy, n_slots=args.slots,
+                          kick_latency=args.kick_latency,
+                          trace=args.trace_out is not None)
     engine = InferenceEngine(model, params, kernel, max_batch=4, max_len=64)
     kernel.start()
     engine.start()
@@ -86,13 +92,20 @@ def main() -> None:
     lats = [r.latency for r in reqs if r.latency is not None]
     print(f"completed {len(lats)}/{len(reqs)} requests")
     if lats:
-        print(f"latency mean {1e3*np.mean(lats):.1f} ms  "
-              f"p95 {1e3*np.percentile(lats, 95):.1f} ms")
+        print(f"latency mean {1e3*sum(lats)/len(lats):.1f} ms  "
+              f"p95 {1e3*percentile(lats, 95):.1f} ms")
     if args.background_train:
         print(f"background train steps: {box['steps']}")
-    print(f"preemptions={kernel.metrics.preemptions} kicks={kernel.metrics.kicks} "
-          f"dispatches={kernel.metrics.dispatches} hint_writes={kernel.hints.writes} "
-          f"boosts={kernel.hints.boosts}")
+    report = KernelReport.from_kernel(kernel)
+    print(report.pretty())
+    if args.report_out:
+        report.write(args.report_out)
+        print(f"report written to {args.report_out}")
+    if args.trace_out:
+        n = write_chrome_trace(kernel.tracer.events, args.trace_out,
+                               end=kernel.now)
+        print(f"wrote {n} trace records to {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

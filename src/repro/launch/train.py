@@ -129,11 +129,10 @@ def _run_scheduled(args, state, start_step, step_fn, make_batch, mgr, t0):
     steps and are preempted at chunk granularity if steps are queued --
     the paper's mixed-workload story applied to the training driver itself.
     """
-    from ..core import Tier
-    from ..core.live import LiveJob, LiveKernel
-    from ..core.policies import make_policy
+    from ..core import KernelReport, Tier, build_kernel
+    from ..core.live import LiveJob
 
-    kernel = LiveKernel(1, make_policy("ufs"))
+    kernel = build_kernel("live", policy="ufs", n_slots=1)
     train_g = kernel.create_group("train", Tier.TIME_SENSITIVE, 10_000.0)
     ckpt_g = kernel.create_group("ckpt", Tier.BACKGROUND, 1.0)
     box = {"state": state, "step": start_step, "failed": False,
@@ -178,8 +177,7 @@ def _run_scheduled(args, state, start_step, step_fn, make_batch, mgr, t0):
     while box["saves_done"] < box["saves_queued"] and time.monotonic() < deadline:
         time.sleep(0.01)
     kernel.stop()
-    print(f"scheduled: dispatches={kernel.metrics.dispatches} "
-          f"preemptions={kernel.metrics.preemptions}")
+    print(KernelReport.from_kernel(kernel).pretty())
     if box["failed"]:
         if mgr:
             mgr.wait()

@@ -1,0 +1,114 @@
+"""Metrics regressions: record_run window clamping and the consolidated
+``Metrics.summary`` read surface.
+
+The clamping bug: the old one-sided ``min(t, window_end)`` could place the
+clipped end *before* the clipped start for a run landing entirely past
+``window_end``, and a run straddling the end edge was charged for its
+out-of-window tail.  Both ends must clamp symmetrically into
+``[window_start, window_end]``.
+"""
+import math
+
+import pytest
+
+from repro.core.metrics import Metrics
+
+
+def _m(start=1.0, end=2.0):
+    m = Metrics()
+    m.window_start, m.window_end = start, end
+    return m
+
+
+# ---------------------------------------------------------------------------
+# record_run clamping
+# ---------------------------------------------------------------------------
+
+def test_run_inside_window_charged_fully():
+    m = _m()
+    m.record_run(0, "bursty", "ts", dur=0.4, t=1.8)
+    assert m.slot_busy[(0, "bursty")] == pytest.approx(0.4)
+    assert m.cpu_by_group["ts"] == pytest.approx(0.4)
+
+
+def test_run_straddling_window_start_clipped():
+    m = _m()
+    m.record_run(0, "bursty", "ts", dur=1.0, t=1.5)     # spans 0.5..1.5
+    assert m.slot_busy[(0, "bursty")] == pytest.approx(0.5)
+
+
+def test_run_straddling_window_end_clipped():
+    m = _m()
+    m.record_run(0, "bound", "bg", dur=1.0, t=2.5)      # spans 1.5..2.5
+    assert m.slot_busy[(0, "bound")] == pytest.approx(0.5)
+
+
+def test_run_entirely_after_window_end_contributes_nothing():
+    """The regression case: hi clamps to window_end and lo used to stay at
+    t - dur > window_end, yielding a negative span."""
+    m = _m()
+    m.record_run(0, "bound", "bg", dur=1.0, t=5.0)      # spans 4.0..5.0
+    assert (0, "bound") not in m.slot_busy
+    assert "bg" not in m.cpu_by_group
+
+
+def test_run_entirely_before_window_start_contributes_nothing():
+    m = _m()
+    m.record_run(0, "bursty", "ts", dur=0.3, t=0.5)
+    assert (0, "bursty") not in m.slot_busy
+
+
+def test_run_spanning_whole_window_charged_window_only():
+    m = _m()
+    m.record_run(1, "bound", "bg", dur=10.0, t=5.0)     # spans -5..5
+    assert m.slot_busy[(1, "bound")] == pytest.approx(1.0)   # exactly the window
+
+
+def test_open_window_end_means_no_upper_clamp():
+    m = _m(start=1.0, end=0.0)                          # end=0 -> open window
+    m.record_run(0, "bursty", "ts", dur=1.0, t=50.0)
+    assert m.slot_busy[(0, "bursty")] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# summary surface
+# ---------------------------------------------------------------------------
+
+def test_summary_structure_and_values():
+    m = _m(start=0.0, end=2.0)
+    m.record_run(0, "bursty", "ts", dur=0.5, t=1.0)
+    m.record_run(1, "bound", "bg", dur=1.0, t=2.0)
+    m.record_request("ts", latency=0.003, t=1.0)
+    m.record_request("ts", latency=0.005, t=1.5)
+    m.record_wakeup("ts", delay=0.001, t=1.0)
+    m.preemptions, m.kicks, m.dispatches = 3, 4, 5
+
+    s = m.summary(n_slots=2)
+    assert s["window"] == {"start": 0.0, "end": 2.0, "duration": 2.0}
+    assert s["counters"]["preemptions"] == 3
+    assert s["counters"]["kicks"] == 4
+    assert s["counters"]["dispatches"] == 5
+    ts = s["groups"]["ts"]
+    assert ts["completed"] == 2
+    assert ts["throughput"] == pytest.approx(1.0)       # 2 requests / 2 s
+    assert ts["cpu_s"] == pytest.approx(0.5)
+    assert ts["latency"]["n"] == 2
+    assert ts["latency"]["mean"] == pytest.approx(0.004)
+    assert ts["wakeup"]["n"] == 1
+    assert ts["wakeup"]["max"] == pytest.approx(0.001)
+    # bg saw CPU but no requests: present, with NaN latency markers.
+    assert s["groups"]["bg"]["completed"] == 0
+    assert math.isnan(s["groups"]["bg"]["latency"]["mean"])
+    assert s["slots"]["n"] == 2
+    assert s["slots"]["busy_by_kind"]["bursty"] == [pytest.approx(0.5), 0.0]
+    assert s["slots"]["busy_by_kind"]["bound"] == [0.0, pytest.approx(1.0)]
+    assert s["slots"]["skew_by_kind"]["bursty"] == pytest.approx(2.0)
+
+
+def test_summary_explicit_groups_includes_idle():
+    m = _m(start=0.0, end=1.0)
+    s = m.summary(groups=["quiet"])
+    assert s["groups"]["quiet"]["completed"] == 0
+    assert s["groups"]["quiet"]["throughput"] == 0.0
+    # No n_slots -> no slots block.
+    assert "slots" not in s

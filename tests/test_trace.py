@@ -1,0 +1,345 @@
+"""Trace-plane tests: schema invariants, Figure-2 cross-check against
+Metrics, determinism, inversion detection, the Chrome exporter, and the
+unified build_kernel / KernelReport surface (ISSUE 7 acceptance criteria).
+
+The load-bearing property is that the trace is a *second, independent*
+accounting path: per-slot busy time reconstructed from start_job/stop_job
+events must agree with the charge-time accounting in ``Metrics`` --
+including window clipping -- or one of the two is lying.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import (Job, KernelReport, SchedKernel, SchedTracer, Tier,
+                        build_kernel, detect_inversions, slot_busy_from_trace,
+                        to_chrome_trace, validate_chrome_trace,
+                        validate_events, wakeup_delays, write_chrome_trace)
+from repro.core.experiment import run_mix
+from repro.core.live import LiveJob, LiveKernel
+from repro.core.metrics import Metrics
+from repro.core.task import JobState
+from repro.core.trace import TraceSchemaError
+from repro.core.ufs import UFSPolicy
+from repro.core.workloads import burner, holder, waiter
+
+WARMUP, DUR = 0.3, 1.0
+
+
+def _traced_mix(**kw):
+    tr = SchedTracer()
+    r = run_mix("ufs", n_slots=2, n_bursty=2, n_bound=2,
+                duration=DUR, warmup=WARMUP, tracer=tr, **kw)
+    return tr, r
+
+
+# ---------------------------------------------------------------------------
+# Schema invariants
+# ---------------------------------------------------------------------------
+
+def test_mixed_sim_trace_passes_schema():
+    """A full mixed run satisfies every schema invariant: only known kinds,
+    monotone-safe timestamps, every start_job closed by a stop_job before
+    the next start on that slot (jobs still on-slot at the horizon are the
+    only tolerated open runs)."""
+    tr, _ = _traced_mix()
+    evs = tr.events
+    assert tr.dropped == 0, "ring must not wrap in this config"
+    counts = validate_events(evs, balanced=False)
+    for kind in ("wake", "enqueue", "dispatch", "start_job", "stop_job",
+                 "preempt_slot", "kick"):
+        assert counts.get(kind, 0) > 0, f"mixed run must emit {kind}"
+    # At most one open run per slot at the horizon.
+    assert 0 <= counts["start_job"] - counts["stop_job"] <= 2
+
+
+def test_validate_events_catches_violations():
+    tr = SchedTracer()
+
+    class J:
+        jid, name, kind = 7, "j", "bursty"
+        group = type("G", (), {"name": "ts"})
+
+    tr.emit("start_job", 1.0, slot=0, job=J())
+    with pytest.raises(TraceSchemaError, match="still running"):
+        tr.emit("start_job", 2.0, slot=0, job=J())
+        validate_events(tr.events)
+    with pytest.raises(TraceSchemaError, match="unbalanced"):
+        validate_events(tr.events[:1], balanced=True)
+    validate_events(tr.events[:1], balanced=False)   # tolerated when asked
+
+    tr2 = SchedTracer()
+    tr2.emit("unboost", 1.0, job=J())
+    with pytest.raises(TraceSchemaError, match="without boost"):
+        validate_events(tr2.events)
+
+    tr3 = SchedTracer()
+    tr3.emit("stop_job", 1.0, slot=3, job=J())
+    with pytest.raises(TraceSchemaError, match="idle slot"):
+        validate_events(tr3.events)
+
+
+def test_tracer_ring_bounds_and_kind_filter():
+    tr = SchedTracer(capacity=4)
+    for i in range(10):
+        tr.emit("kick", float(i), slot=0)
+    assert len(tr.events) == 4 and tr.emitted == 10 and tr.dropped == 6
+    assert [e.t for e in tr.events] == [6.0, 7.0, 8.0, 9.0]
+
+    trf = SchedTracer(kinds={"kick"})
+    trf.emit("kick", 0.0, slot=0)
+    trf.emit("wake", 0.1)
+    assert [e.kind for e in trf.events] == ["kick"]
+
+    with pytest.raises(ValueError):
+        SchedTracer(kinds={"not_a_kind"})
+    with pytest.raises(ValueError):
+        SchedTracer(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Figure-2 cross-check: trace-derived busy timeline vs Metrics
+# ---------------------------------------------------------------------------
+
+def test_trace_busy_matches_metrics_slot_utilization():
+    """The trace-derived per-slot busy timeline must agree with the
+    charge-time accounting in Metrics, per kind and per slot, including the
+    warmup/horizon window clipping -- both paths see the same run edges, so
+    agreement is exact up to float rounding."""
+    tr, r = _traced_mix()
+    end = WARMUP + DUR
+    for kind in ("bursty", "bound"):
+        from_trace = slot_busy_from_trace(tr.events, r.n_slots, kind=kind,
+                                          window=(WARMUP, end), end=end)
+        from_metrics = r.metrics.slot_utilization(kind, r.n_slots)
+        assert from_trace == pytest.approx(from_metrics, abs=1e-9), kind
+        assert sum(from_trace) > 0.0, f"no {kind} busy time recorded"
+
+
+def test_wakeup_delays_match_metrics_convention():
+    tr, r = _traced_mix()
+    d = wakeup_delays(tr.events)
+    assert "ts" in d and len(d["ts"]) > 0
+    assert all(x >= 0.0 for x in d["ts"])
+    # Metrics only records wakeups inside the window; the trace sees all of
+    # them, so the trace count dominates.
+    assert len(d["ts"]) >= len(r.metrics.wakeup_latency["ts"])
+
+
+# ---------------------------------------------------------------------------
+# Determinism: fixed seed => byte-stable export
+# ---------------------------------------------------------------------------
+
+def test_sim_trace_byte_stable(tmp_path):
+    """Two identical seeded sim runs export byte-identical Chrome traces.
+    Each run goes in a fresh interpreter: job ids come from a process-global
+    counter, so byte stability is a property of an invocation, not of
+    repeated runs inside one process."""
+    script = ("from repro.core import SchedTracer, write_chrome_trace\n"
+              "from repro.core.experiment import run_mix\n"
+              "import sys\n"
+              "tr = SchedTracer()\n"
+              "run_mix('ufs', n_slots=2, n_bursty=2, n_bound=2,\n"
+              "        duration=0.5, warmup=0.1, tracer=tr, seed=13)\n"
+              "n = write_chrome_trace(tr.events, sys.argv[1], end=0.6)\n"
+              "assert n > 0\n")
+    paths = [tmp_path / "a.json", tmp_path / "b.json"]
+    env = dict(os.environ, PYTHONPATH="src")
+    for p in paths:
+        subprocess.run([sys.executable, "-c", script, str(p)], check=True,
+                       env=env, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert paths[0].read_bytes() == paths[1].read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# Priority inversion: the boost shows up as a detectable span
+# ---------------------------------------------------------------------------
+
+def test_inversion_detected_with_resolution():
+    # Full 40 s horizon at slice granularity emits ~80k events; size the
+    # ring so the early boost/unboost pair survives to the end.
+    tr = SchedTracer(capacity=1 << 18)
+    k = build_kernel("sim", policy="ufs", hints_enabled=True, tracer=tr)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = k.create_lock("spin")
+    jobs = [Job(bg, behavior=holder(lock, compute=1.0), name="holder"),
+            Job(ts, behavior=waiter(lock), name="waiter"),
+            Job(ts, behavior=burner(total=30.0), name="burner")]
+    for j in jobs:
+        j.pinned_slot = 0
+        k.add_job(j)
+    k.run(40.0)
+    validate_events(tr.events, balanced=False)
+
+    inv = detect_inversions(tr.events)
+    resolved = [i for i in inv if i["resolution"] is not None]
+    assert resolved, "hinted run must produce at least one resolved inversion"
+    assert all(i["resolution"] > 0.0 for i in resolved)
+    assert resolved[0]["job"] == "holder"
+    assert resolved[0]["boost_group"] == "ts"
+
+    s = tr.summary()
+    assert s.inversions == len(inv)
+    assert s.inversions_resolved == len(resolved)
+    assert s.max_boost_resolution == max(i["resolution"] for i in resolved)
+    # Lock identity is in the trace: the wait names the holder.
+    waits = [e for e in tr.events if e.kind == "lock_wait"]
+    assert any(e.args.get("holder") == "holder" for e in waits)
+
+
+# ---------------------------------------------------------------------------
+# Chrome export (acceptance: sim AND live both export valid trace JSON)
+# ---------------------------------------------------------------------------
+
+def _live_traced(dur=0.5):
+    tr = SchedTracer()
+    k = build_kernel("live", policy="ufs", n_slots=1, tracer=tr)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    tsj = LiveJob(ts, lambda b: (time.sleep(0.002), "blocked")[1],
+                  name="ts0", kind="bursty")
+    stop = threading.Event()
+
+    def waker():
+        while not stop.is_set():
+            time.sleep(0.005)
+            if tsj.state == JobState.BLOCKED:
+                k.wake(tsj)
+
+    k.start()
+    k.wake(tsj)
+    k.wake(LiveJob(bg, lambda b: (time.sleep(0.002), "yield")[1],
+                   name="bg0", kind="bound"))
+    wt = threading.Thread(target=waker, daemon=True)
+    wt.start()
+    time.sleep(dur)
+    stop.set()
+    wt.join()
+    k.stop()
+    return tr, k
+
+
+def test_chrome_export_valid_sim_and_live(tmp_path):
+    sim_tr, _ = _traced_mix()
+    live_tr, live_k = _live_traced()
+    for name, tr, end in (("sim", sim_tr, WARMUP + DUR),
+                          ("live", live_tr, live_k.now)):
+        p = tmp_path / f"{name}.json"
+        n = write_chrome_trace(tr.events, str(p), end=end)
+        doc = json.loads(p.read_text())
+        assert validate_chrome_trace(doc) == n
+        phases = {ev["ph"] for ev in doc["traceEvents"]}
+        assert {"X", "M"} <= phases, name
+        pids = {ev["pid"] for ev in doc["traceEvents"]}
+        assert {1, 2} <= pids, f"{name}: needs slot and group tracks"
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(TraceSchemaError):
+        validate_chrome_trace({"traceEvents": []})
+    # An empty stream still exports the three process-name records.
+    assert validate_chrome_trace(to_chrome_trace([])) == 3
+    bad = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1, "tid": 0,
+                            "ts": 0}]}             # X without dur
+    with pytest.raises(TraceSchemaError, match="dur"):
+        validate_chrome_trace(bad)
+
+
+# ---------------------------------------------------------------------------
+# Sim/live parity on the TraceSummary
+# ---------------------------------------------------------------------------
+
+def test_sim_live_trace_summary_parity():
+    """Both backends drive the same SchedCore, so the set of lifecycle kinds
+    they emit must match (absolute counts are clock-dependent and never
+    compared).  Lock kinds are excluded: the two workload shapes here take
+    no locks, so they should not appear at all."""
+    sim_tr, _ = _traced_mix()
+    live_tr, _ = _live_traced()
+    sim_s, live_s = sim_tr.summary(), live_tr.summary()
+    diff = sim_s.diff(live_s)
+    for k in ("lock_wait", "lock_acquire", "lock_release"):
+        diff.pop(k, None)
+    assert diff == {}, f"backends emit different lifecycle kinds: {diff}"
+    for s in (sim_s, live_s):
+        for kind in ("wake", "enqueue", "start_job", "stop_job",
+                     "preempt_slot"):
+            assert s.counts.get(kind, 0) > 0
+    rt = json.loads(sim_s.to_json())
+    assert rt["events"] == sim_s.events
+
+
+# ---------------------------------------------------------------------------
+# build_kernel / KernelReport / deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_build_kernel_modes():
+    k = build_kernel("sim", policy="ufs", n_slots=3, seed=5)
+    assert isinstance(k, SchedKernel) and len(k.slots) == 3
+    assert k.tracer is None
+    kt = build_kernel("sim", policy="vdf", trace=True)
+    assert isinstance(kt.tracer, SchedTracer)
+    mine = SchedTracer(capacity=8)
+    assert build_kernel("sim", tracer=mine, trace=True).tracer is mine
+    kl = build_kernel("live", policy="ufs")
+    assert isinstance(kl, LiveKernel)
+    assert isinstance(build_kernel("sim", policy=UFSPolicy()), SchedKernel)
+    with pytest.raises(ValueError, match="unknown mode"):
+        build_kernel("gpu")
+    with pytest.raises(ValueError, match="unknown policy"):
+        build_kernel("sim", policy="nope")
+
+
+def test_kernel_report_roundtrip():
+    tr, r = _traced_mix()
+    k = build_kernel("sim", policy="ufs", n_slots=2, tracer=tr)
+    # Reuse the finished run's metrics for the report surface.
+    k.metrics = r.metrics
+    rep = KernelReport.from_kernel(k)
+    assert rep.mode == "sim" and rep.n_slots == 2
+    d = json.loads(rep.to_json())          # strict JSON: no NaN/Inf allowed
+    assert d["metrics"]["groups"]["ts"]["completed"] > 0
+    assert d["trace"]["events"] == len(tr.events)
+    txt = rep.pretty()
+    assert "group ts" in txt and "trace:" in txt
+
+
+def test_sched_kernel_legacy_positionals_warn_and_map():
+    m = Metrics()
+    with pytest.warns(DeprecationWarning):
+        k = SchedKernel(1, UFSPolicy(), None, m, 0.25, False, 9)
+    assert k.metrics is m
+    assert k.kick_latency == 0.25
+    assert k.hints_enabled is False
+    with pytest.raises(TypeError, match="positional"):
+        SchedKernel(1, UFSPolicy(), None, None, 0.0, True, 0, "extra")
+
+
+def test_live_kernel_legacy_positionals_warn_and_map():
+    with pytest.warns(DeprecationWarning):
+        k = LiveKernel(1, UFSPolicy(), None, False, 0.125)
+    assert k.hints_enabled is False
+    assert k.kick_latency == 0.125
+    # The unified keyword form accepts the shared signature silently.
+    m = Metrics()
+    k2 = LiveKernel(1, UFSPolicy(), metrics=m, seed=3, tracer=SchedTracer())
+    assert k2.metrics is m and k2.tracer is not None
+
+
+def test_mix_result_summary_consolidation():
+    _, r = _traced_mix()
+    s = r.summary()
+    assert s is r.summary()                        # computed once, cached
+    assert r.thr("ts") == s["groups"]["ts"]["throughput"]
+    assert r.lat("ts")["p95"] == s["groups"]["ts"]["latency"]["p95"]
+    assert r.thr("missing") == 0.0
+    assert s["slots"]["n"] == r.n_slots
+    assert s["slots"]["busy_by_kind"]["bursty"] == \
+        r.metrics.slot_utilization("bursty", r.n_slots)
