@@ -10,6 +10,19 @@ from __future__ import annotations
 import argparse
 import sys
 
+#: Row-name prefix emitted by each paper_tables benchmark; used to decide
+#: whether a --only filter can skip the (expensive) benchmark entirely.
+_ROW_PREFIX = {
+    "fig1_fig6_mixed_throughput": "fig6",
+    "fig2_placement": "fig2",
+    "tab3_latency": "tab3",
+    "fig7_oversubscription": "fig7",
+    "fig8_weighted_groups": "fig8",
+    "tab4_priority_inversion": "tab4",
+    "fig9_schbench": "fig9",
+    "sec67_hint_overhead": "sec67",
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -30,15 +43,22 @@ def main() -> None:
         trace_mod.main(["--out", args.trace_sample])
 
     from . import paper_tables
-    benches = list(paper_tables.ALL)
+    # (bench fn, row-name prefix): --only skips non-matching benchmarks
+    # *before* running them, not just when printing their rows.
+    benches = [(fn, _ROW_PREFIX.get(fn.__name__)) for fn in paper_tables.ALL]
     if not args.skip_live:
         from . import fig10_ml, parity
-        benches.append(fig10_ml.run)
-        benches.append(parity.run)
+        benches.append((fig10_ml.run, "fig10"))
+        benches.append((parity.run, "parity"))
 
     only = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
-    for fn in benches:
+    for fn, prefix in benches:
+        # Unknown prefix (new benchmark not yet registered): always run it
+        # and let the row-level filter decide.
+        if only and prefix is not None and not any(
+                p.startswith(prefix) or prefix.startswith(p) for p in only):
+            continue
         try:
             rows = fn(short=args.short)
         except Exception as e:  # noqa: BLE001

@@ -25,7 +25,7 @@ from .live import LiveKernel, LiveJob, LiveLock, ThreadExecutor
 from .build import build_kernel, KernelReport
 from .hints import HintTable
 from .locks import SimLock, spin_acquire
-from .metrics import Metrics, percentile
+from .metrics import Metrics, percentile, percentile_sorted
 from .ufs import UFSPolicy
 from .policies import make_policy, POLICIES
 
@@ -41,5 +41,6 @@ __all__ = [
     "detect_inversions", "to_chrome_trace", "write_chrome_trace",
     "validate_events", "validate_chrome_trace", "TraceSchemaError",
     "HintTable", "SimLock", "spin_acquire", "Metrics", "percentile",
+    "percentile_sorted",
     "UFSPolicy", "make_policy", "POLICIES",
 ]

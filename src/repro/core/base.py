@@ -40,6 +40,13 @@ DEFAULT_SLICE = 0.003  # 3 ms bounded execution interval (paper section 5.1.1)
 _NULL_GUARD = nullcontext()
 
 
+def _trace_noop(kind, *, slot=None, job=None, **args) -> None:
+    """Pre-bound no-op installed as ``core.trace`` when no tracer is
+    attached: plain function, no self binding, no tracer lookup.  Hot
+    emitters additionally guard on ``core._traced`` so untraced runs never
+    even build the kwargs dict."""
+
+
 class Slot:
     """An execution unit: one mesh-slice program context (a CPU, in the paper).
 
@@ -95,8 +102,10 @@ class Policy(ABC):
         while nxt is not None and nxt.state != JobState.RUNNABLE:
             nxt = slot.local_dsq.pop_front()
         if nxt is None:
-            self.kernel.metrics.dispatches += 1
-            self.kernel.trace("dispatch", slot=slot.sid)
+            k = self.kernel
+            k.metrics.dispatches += 1
+            if k._traced:
+                k.trace("dispatch", slot=slot.sid)
             self.dispatch(slot)
             nxt = slot.local_dsq.pop_front()
             while nxt is not None and nxt.state != JobState.RUNNABLE:
@@ -131,9 +140,13 @@ class Executor(ABC):
     mutual exclusion, and kick delivery; the executor calls *up* into the
     core's lifecycle methods (``schedule_next`` / ``start_job`` /
     ``stop_job`` / ``preempt_slot``) when its execution model needs them.
+
+    ``single_threaded`` declares that all core/policy/tracer access happens
+    on one thread, letting the core drop tracer locking (sim backend).
     """
 
     core: "SchedCore"
+    single_threaded = False
 
     def bind(self, core: "SchedCore") -> None:
         self.core = core
@@ -210,6 +223,15 @@ class SchedCore:
         self.hints_enabled = hints_enabled
         self.metrics = metrics or Metrics()
         self.tracer = tracer
+        self._traced = tracer is not None
+        if not self._traced:
+            # Shadow the bound method with a module-level no-op: untraced
+            # emit sites that aren't individually guarded cost one plain
+            # call, no kwargs-dict plumbing inside.
+            self.trace = _trace_noop
+        elif getattr(executor, "single_threaded", False):
+            # Single-threaded event loop: the tracer ring needs no mutex.
+            tracer.set_threadsafe(False)
         self.kick_latency = kick_latency
         self.jobs: dict[int, Job] = {}
         self.groups: dict[str, WorkloadGroup] = {}
@@ -228,12 +250,12 @@ class SchedCore:
 
     def trace(self, kind: str, *, slot: Optional[int] = None,
               job: Optional[Job] = None, **args) -> None:
-        """Emit a lifecycle event into the tracer (no-op when untraced).
-        The timestamp comes from the executor clock, so sim and live runs
+        """Emit a lifecycle event into the tracer.  When untraced this
+        method is shadowed by a pre-bound no-op (see ``__init__``) and hot
+        emitters skip the call entirely via ``self._traced``.  The
+        timestamp comes from the executor clock, so sim and live runs
         share one event schema under their respective time bases."""
-        tr = self.tracer
-        if tr is not None:
-            tr.emit(kind, self.executor.now, slot=slot, job=job, **args)
+        self.tracer.emit(kind, self.executor.now, slot=slot, job=job, **args)
 
     def create_group(self, name: str, tier: Tier, weight: float = 100.0,
                      parent: Optional[WorkloadGroup] = None, **kw) -> WorkloadGroup:
@@ -255,15 +277,17 @@ class SchedCore:
             job.state = JobState.RUNNABLE
             job.wakeup_time = self.now
             job.location = None
-            self.trace("wake", job=job)
-            self.trace("enqueue", job=job, requeue=False)
+            if self._traced:
+                self.trace("wake", job=job)
+                self.trace("enqueue", job=job, requeue=False)
             self.policy.enqueue(job, requeue=False)
 
     def requeue(self, job: Job) -> None:
         with self.executor.guard():
             job.state = JobState.RUNNABLE
             job.location = None
-            self.trace("enqueue", job=job, requeue=True)
+            if self._traced:
+                self.trace("enqueue", job=job, requeue=True)
             self.policy.enqueue(job, requeue=True)
 
     # ------------------------------------------------------------- kicks
@@ -274,7 +298,8 @@ class SchedCore:
         takes effect only once the in-flight device program retires.
         """
         self.metrics.kicks += 1
-        self.trace("kick", slot=slot.sid, preempt=preempt)
+        if self._traced:
+            self.trace("kick", slot=slot.sid, preempt=preempt)
         if self.kick_latency > 0:
             self.executor.defer(self.kick_latency,
                                 lambda: self.executor.deliver_kick(slot, preempt))
@@ -306,7 +331,8 @@ class SchedCore:
         slot.current = job
         slot.run_started = self.now
         slot.slice_budget = self.policy.task_slice(job)
-        self.trace("start_job", slot=slot.sid, job=job)
+        if self._traced:
+            self.trace("start_job", slot=slot.sid, job=job)
         self.policy.running(job, slot)
 
     def stop_job(self, slot: Slot, used: float, reason: str = "stop") -> Job:
@@ -319,7 +345,9 @@ class SchedCore:
         self.executor.job_stopping(slot)         # cancel in-flight run-end event
         self.policy.stopping(job, slot, used)
         self.metrics.record_run(slot.sid, job.kind, job.group.name, used, self.now)
-        self.trace("stop_job", slot=slot.sid, job=job, used=used, reason=reason)
+        if self._traced:
+            self.trace("stop_job", slot=slot.sid, job=job, used=used,
+                       reason=reason)
         slot.current = None
         return job
 
@@ -332,7 +360,8 @@ class SchedCore:
             return
         self.metrics.preemptions += 1
         used = self.now - slot.run_started
-        self.trace("preempt_slot", slot=slot.sid, job=job)
+        if self._traced:
+            self.trace("preempt_slot", slot=slot.sid, job=job)
         self.stop_job(slot, used, reason="preempt")
         self.executor.job_preempted(job, slot, used)
         self.schedule_next(slot)
@@ -340,13 +369,16 @@ class SchedCore:
     # ----------------------------------------------------------- hint wiring
     def _hint_boost(self, job: Job) -> None:
         with self.executor.guard():
-            self.trace("boost", job=job,
-                       boost_group=job.boost_group.name if job.boost_group else "")
+            if self._traced:
+                self.trace("boost", job=job,
+                           boost_group=job.boost_group.name
+                           if job.boost_group else "")
             self.policy.on_boost(job)
 
     def _hint_unboost(self, job: Job) -> None:
         with self.executor.guard():
-            self.trace("unboost", job=job)
+            if self._traced:
+                self.trace("unboost", job=job)
             self.policy.on_unboost(job)
 
     # ----------------------------------------------------------- elasticity

@@ -6,74 +6,160 @@
 * :class:`GroupDSQ` -- custom per-group queue for deferred background
   dispatch; ordered by task virtual runtime.
 
-Both are small ordered containers with O(log n) insert and O(1)/O(log n) pop;
-``bisect`` on a list is ideal at the queue sizes a slot or group ever holds.
+Implementation: an indexed binary heap with lazy deletion (DESIGN.md
+section 11).  Entries are mutable ``[key, tie, job]`` cells kept in a
+``heapq`` heap plus a ``jid -> cell`` index, so the hot operations are
+
+* ``push``            -- O(log n)
+* ``pop_front``       -- amortized O(log n) (plus draining dead cells)
+* ``remove``          -- O(1): mark the indexed cell dead, prune lazily
+* ``peek_front/key``  -- amortized O(1)
+
+``remove`` is the operation that matters: the hint-boost path pulls a lock
+holder out of an arbitrarily deep background DSQ on *every* priority
+inversion, which was O(n) per boost on the previous sorted-list layout and
+dominated deep-queue sim time.  Dead cells are pruned at the heap top on
+every peek/pop and compacted wholesale once they outnumber live ones.
+
+The tie counter is **per queue** (not module-global): two kernels built in
+the same process observe identical tie-break sequences, so same-seed runs
+are byte-identical run to run.  Ties are unique within a queue, so heap
+comparisons never reach the ``job`` field.
 """
 from __future__ import annotations
 
-import bisect
-import itertools
+import heapq
 from typing import Optional
 
 from .task import Job
 
-_tie = itertools.count()
+_COMPACT_MIN_DEAD = 16   # never compact tiny queues
 
 
 class _OrderedQueue:
+    __slots__ = ("_heap", "_index", "_tie", "_dead")
+
     def __init__(self) -> None:
-        self._items: list[tuple[float, int, Job]] = []
+        self._heap: list = []          # [key, tie, job-or-None] cells
+        self._index: dict = {}         # jid -> live cell
+        self._tie = 0
+        self._dead = 0                 # dead cells still sitting in _heap
 
     def __len__(self) -> int:
-        return len(self._items)
+        return len(self._index)
 
     def __bool__(self) -> bool:
-        return bool(self._items)
+        return bool(self._index)
 
+    # ------------------------------------------------------------ internals
+    def _prune(self) -> None:
+        """Drop dead cells off the heap top."""
+        heap = self._heap
+        while heap and heap[0][2] is None:
+            heapq.heappop(heap)
+            self._dead -= 1
+
+    def _compact(self) -> None:
+        if self._dead > _COMPACT_MIN_DEAD and self._dead * 2 > len(self._heap):
+            self._heap = [c for c in self._heap if c[2] is not None]
+            heapq.heapify(self._heap)
+            self._dead = 0
+
+    # ------------------------------------------------------------- hot path
     def push(self, job: Job, key: float) -> None:
-        bisect.insort(self._items, (key, next(_tie), job))
+        old = self._index.get(job.jid)
+        if old is not None:            # double-push: supersede the stale cell
+            old[2] = None
+            self._dead += 1
+        self._tie += 1
+        cell = [key, self._tie, job]
+        self._index[job.jid] = cell
+        heapq.heappush(self._heap, cell)
 
     def pop_front(self) -> Optional[Job]:
-        if not self._items:
+        self._prune()
+        if not self._heap:
             return None
-        return self._items.pop(0)[2]
+        key, tie, job = heapq.heappop(self._heap)
+        del self._index[job.jid]
+        return job
 
     def peek_front(self) -> Optional[Job]:
-        return self._items[0][2] if self._items else None
+        self._prune()
+        return self._heap[0][2] if self._heap else None
 
     def peek_key(self) -> Optional[float]:
-        return self._items[0][0] if self._items else None
-
-    def pop_back(self) -> Optional[Job]:
-        if not self._items:
-            return None
-        return self._items.pop()[2]
-
-    def pop_first_where(self, pred) -> Optional[Job]:
-        for i, (_, _, j) in enumerate(self._items):
-            if pred(j):
-                del self._items[i]
-                return j
-        return None
+        self._prune()
+        return self._heap[0][0] if self._heap else None
 
     def remove(self, job: Job) -> bool:
-        for i, (_, _, j) in enumerate(self._items):
-            if j is job:
-                del self._items[i]
-                return True
-        return False
+        """Keyed removal: O(1) dead-marking via the jid index."""
+        cell = self._index.get(job.jid)
+        if cell is None or cell[2] is not job:
+            return False
+        cell[2] = None
+        del self._index[job.jid]
+        self._dead += 1
+        self._compact()
+        return True
 
-    def jobs(self) -> list[Job]:
-        return [j for _, _, j in self._items]
+    # ----------------------------------------------------------- cold path
+    def pop_back(self) -> Optional[Job]:
+        """O(n): the heap has no cheap max.  Only used by tests/tools."""
+        if not self._index:
+            return None
+        cell = max(self._index.values())
+        cell_job = cell[2]
+        cell[2] = None
+        del self._index[cell_job.jid]
+        self._dead += 1
+        self._compact()
+        return cell_job
+
+    def pop_first_where(self, pred) -> Optional[Job]:
+        """Pop the first job (in key order) satisfying ``pred``.
+
+        Pops cells off the heap while scanning and re-pushes the skipped
+        ones afterwards; since cells keep their (key, tie), order is
+        preserved exactly.  ``pred`` raising never loses entries.
+        """
+        heap = self._heap
+        skipped: list = []
+        found: Optional[Job] = None
+        try:
+            while heap:
+                cell = heapq.heappop(heap)
+                job = cell[2]
+                if job is None:
+                    self._dead -= 1
+                    continue
+                skipped.append(cell)     # keep provisionally: pred may raise
+                if pred(job):
+                    skipped.pop()
+                    del self._index[job.jid]
+                    found = job
+                    break
+        finally:
+            for cell in skipped:
+                heapq.heappush(heap, cell)
+        return found
+
+    def jobs(self) -> list:
+        """Live jobs in key order (O(n log n); reporting/balancing only)."""
+        return [c[2] for c in sorted(self._index.values())]
 
     def total_key_weight(self, keyfn) -> float:
-        return sum(keyfn(j) for _, _, j in self._items)
+        # Summed in key order so float accumulation matches the old sorted
+        # layout bit for bit.
+        return sum(keyfn(j) for j in self.jobs())
 
 
 class LocalDSQ(_OrderedQueue):
     """Per-slot local dispatch queue."""
+    __slots__ = ()
 
 
 class GroupDSQ(_OrderedQueue):
     """Per-group custom dispatch queue, ordered by task vruntime: the task at
     the head has executed the least and runs first (paper section 5.1.3)."""
+    __slots__ = ()

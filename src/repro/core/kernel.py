@@ -23,7 +23,6 @@ only mutate queue state and request kicks, exactly as eBPF callbacks do.
 from __future__ import annotations
 
 import heapq
-import itertools
 import warnings
 from contextlib import nullcontext
 from typing import Callable, ContextManager, Optional
@@ -43,42 +42,93 @@ _NULL_GUARD = nullcontext()
 
 
 class SimClock:
-    """Deterministic discrete-event clock: heap of (time, seq, fn)."""
+    """Deterministic discrete-event clock with cancellable events.
+
+    Events are mutable ``[time, seq, fn]`` cells; :meth:`at`/:meth:`after`
+    return the cell as a handle and :meth:`cancel` kills it in O(1) by
+    nulling ``fn`` (lazy deletion, DESIGN.md section 11).  Dead cells are
+    skipped on pop and compacted wholesale once they outnumber live ones,
+    so the heap no longer grows with every preemption or slice expiry.
+    ``seq`` is per-clock, so same-seed runs are deterministic regardless of
+    how many other kernels the process has built.
+
+    :attr:`processed` counts executed events -- the denominator of the
+    events/sec figure in ``benchmarks/microbench.py``.
+    """
 
     def __init__(self) -> None:
         self.now = 0.0
-        self._heap: list = []
-        self._seq = itertools.count()
+        self._heap: list = []          # [t, seq, fn-or-None] cells
+        self._seq = 0
+        self._dead = 0                 # cancelled cells still in the heap
+        self.processed = 0
 
-    def at(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+    def __len__(self) -> int:
+        """Live (uncancelled) pending events."""
+        return len(self._heap) - self._dead
 
-    def after(self, dt: float, fn: Callable[[], None]) -> None:
-        self.at(self.now + dt, fn)
+    @property
+    def heap_size(self) -> int:
+        """Raw heap occupancy including dead cells (compaction telemetry)."""
+        return len(self._heap)
+
+    def at(self, t: float, fn: Callable[[], None]) -> list:
+        self._seq += 1
+        ev = [max(t, self.now), self._seq, fn]
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def after(self, dt: float, fn: Callable[[], None]) -> list:
+        return self.at(self.now + dt, fn)
+
+    def cancel(self, ev: list) -> bool:
+        """Cancel a pending event.  Returns False if it already ran or was
+        already cancelled.  O(1); the cell is pruned from the heap lazily."""
+        if ev[2] is None:
+            return False
+        ev[2] = None
+        self._dead += 1
+        if self._dead > 64 and self._dead * 2 > len(self._heap):
+            self._heap = [e for e in self._heap if e[2] is not None]
+            heapq.heapify(self._heap)
+            self._dead = 0
+        return True
 
     def run_until(self, horizon: float) -> None:
-        while self._heap and self._heap[0][0] <= horizon:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = t
+        heap = self._heap
+        while heap and heap[0][0] <= horizon:
+            ev = heapq.heappop(heap)
+            fn = ev[2]
+            if fn is None:
+                self._dead -= 1
+                continue
+            # Mark executed *before* the callback: a nested cancel of this
+            # same (already-popped) event must be a no-op, or _dead drifts.
+            ev[2] = None
+            self.now = ev[0]
             fn()
+            self.processed += 1
         self.now = max(self.now, horizon)
 
     def empty(self) -> bool:
-        return not self._heap
+        return len(self._heap) == self._dead
 
 
 class SimExecutor(Executor):
     """Discrete-event backend: jobs are generators of bounded phases.
 
-    Owns the virtual clock, the per-slot run-end tokens that invalidate
-    stale events, and the phase machinery (:meth:`advance`) that turns a
-    job's behaviour generator into wake/block/lock transitions against the
+    Owns the virtual clock, the per-slot run-end event handles (cancelled
+    on stop instead of token-bumped, so stale closures never linger in the
+    heap), and the phase machinery (:meth:`advance`) that turns a job's
+    behaviour generator into wake/block/lock transitions against the
     shared core.
     """
 
+    single_threaded = True
+
     def __init__(self) -> None:
         self.clock = SimClock()
-        self._run_tokens: dict[int, int] = {}
+        self._run_events: dict[int, list] = {}   # sid -> pending run-end handle
 
     # ---------------------------------------------------- Executor protocol
     @property
@@ -104,7 +154,9 @@ class SimExecutor(Executor):
         self._arm_run_end(slot)
 
     def job_stopping(self, slot: Slot) -> None:
-        self._bump_token(slot)                   # cancel in-flight run-end event
+        ev = self._run_events.pop(slot.sid, None)
+        if ev is not None:
+            self.clock.cancel(ev)                # cancel in-flight run-end event
 
     def job_preempted(self, job: Job, slot: Slot, used: float) -> None:
         job.burst_remaining -= used
@@ -122,20 +174,21 @@ class SimExecutor(Executor):
         self.clock.after(0.0, lambda: self.core.schedule_next(slot))
 
     # ------------------------------------------------------- run-end events
-    def _bump_token(self, slot: Slot) -> int:
-        token = self._run_tokens.get(slot.sid, 0) + 1
-        self._run_tokens[slot.sid] = token
-        return token
-
     def _arm_run_end(self, slot: Slot) -> None:
         job = slot.current
         run_for = min(job.burst_remaining, slot.slice_budget)
-        token = self._bump_token(slot)
-        self.clock.after(run_for, lambda: self._run_end(slot, token))
+        stale = self._run_events.get(slot.sid)
+        if stale is not None:                    # defensive: never two armed
+            self.clock.cancel(stale)
+        self._run_events[slot.sid] = self.clock.after(
+            run_for, lambda: self._run_end(slot))
 
-    def _run_end(self, slot: Slot, token: int) -> None:
-        if token != self._run_tokens.get(slot.sid) or slot.current is None:
-            return                               # stale event (preempted meanwhile)
+    def _run_end(self, slot: Slot) -> None:
+        # Cancellation handles staleness: if this fires, the run it was
+        # armed for is still current (stop_job cancels on every stop path).
+        self._run_events.pop(slot.sid, None)
+        if slot.current is None:
+            return
         core = self.core
         job = slot.current
         used = core.now - slot.run_started

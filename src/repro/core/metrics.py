@@ -10,13 +10,18 @@ from collections import defaultdict
 from typing import Optional
 
 
-def percentile(values: list, q: float) -> float:
-    """Nearest-rank percentile on a copy (q in [0,100])."""
-    if not values:
+def percentile_sorted(s: list, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list (q in [0,100])."""
+    if not s:
         return float("nan")
-    s = sorted(values)
     k = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
     return s[k]
+
+
+def percentile(values: list, q: float) -> float:
+    """Nearest-rank percentile on a copy (q in [0,100]).  Callers reading
+    several quantiles should sort once and use :func:`percentile_sorted`."""
+    return percentile_sorted(sorted(values), q)
 
 
 class Metrics:
@@ -72,12 +77,15 @@ class Metrics:
         if not lat:
             return {"mean": float("nan"), "p50": float("nan"), "p95": float("nan"),
                     "p99": float("nan"), "p999": float("nan"), "n": 0}
+        s = sorted(lat)
         return {
+            # mean sums the insertion-order list so float accumulation is
+            # stable against the sort (byte-identical summaries).
             "mean": sum(lat) / len(lat),
-            "p50": percentile(lat, 50),
-            "p95": percentile(lat, 95),
-            "p99": percentile(lat, 99),
-            "p999": percentile(lat, 99.9),
+            "p50": percentile_sorted(s, 50),
+            "p95": percentile_sorted(s, 95),
+            "p99": percentile_sorted(s, 99),
+            "p999": percentile_sorted(s, 99.9),
             "n": len(lat),
         }
 
@@ -97,8 +105,9 @@ class Metrics:
         if not w:
             return {"mean": float("nan"), "p95": float("nan"),
                     "max": float("nan"), "n": 0}
-        return {"mean": sum(w) / len(w), "p95": percentile(w, 95),
-                "max": max(w), "n": len(w)}
+        s = sorted(w)
+        return {"mean": sum(w) / len(w), "p95": percentile_sorted(s, 95),
+                "max": s[-1], "n": len(w)}
 
     # ------------------------------------------------------------------
     def summary(self, groups: Optional[list] = None,

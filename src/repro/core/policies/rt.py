@@ -39,8 +39,6 @@ RT_WINDOW = 1.0               # throttling window
 RT_RUNTIME_FRAC = 0.95        # RT may use 95% of each window
 FAIR_BUDGET = 0.05            # fair-server budget per window (~5%)
 
-_seq = itertools.count()
-
 
 class RTPolicy(Policy):
     """quantum=None -> SCHED_FIFO; quantum=0.1 -> SCHED_RR."""
@@ -48,6 +46,9 @@ class RTPolicy(Policy):
     def __init__(self, quantum=None):
         self.quantum = quantum
         self.name = "fifo" if quantum is None else "rr"
+        # Per-instance FIFO sequence: two kernels built in one process must
+        # observe identical tie-break sequences (was a module global).
+        self._seq = itertools.count()
         self.fair_queue = GroupDSQ()          # global fair rq, keyed by vruntime
         self.fair_vmin = 0.0
         self.rt_since: dict[int, float] = {}  # sid -> RT usage since last fair grant
@@ -91,10 +92,10 @@ class RTPolicy(Policy):
                 slot = self._find_lowest_rq(job) or kernel.online_slots()[0]
             if self.quantum is None:
                 # FIFO: a preempted task resumes ahead of its queue.
-                slot.local_dsq.push(job, -float(next(_seq)))
+                slot.local_dsq.push(job, -float(next(self._seq)))
             else:
                 # RR: expired quantum -> tail of its slot's queue.
-                slot.local_dsq.push(job, float(next(_seq)))
+                slot.local_dsq.push(job, float(next(self._seq)))
             job.location = ("local", slot)
             if slot.current is None:
                 kernel.kick(slot, preempt=False)
@@ -117,7 +118,7 @@ class RTPolicy(Policy):
             slot = prev if prev is not None and prev.online and self._allowed(job, prev) \
                 else next(s for s in kernel.online_slots() if self._allowed(job, s))
             preempt = False
-        slot.local_dsq.push(job, float(next(_seq)))
+        slot.local_dsq.push(job, float(next(self._seq)))
         job.location = ("local", slot)
         if slot.current is None:
             kernel.kick(slot, preempt=False)
@@ -182,7 +183,7 @@ class RTPolicy(Policy):
                                    and self._allowed(j, slot)))
                     if job is not None:
                         job.prev_slot = slot.sid
-                        slot.local_dsq.push(job, float(next(_seq)))
+                        slot.local_dsq.push(job, float(next(self._seq)))
                         job.location = ("local", slot)
                         kernel.metrics.lb_migrations += 1
                         return

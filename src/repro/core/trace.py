@@ -36,8 +36,9 @@ import json
 import math
 import threading
 from collections import Counter, defaultdict, deque
+from contextlib import nullcontext
 from dataclasses import dataclass, field
-from typing import Iterable, Optional
+from typing import ContextManager, Iterable, Optional
 
 __all__ = [
     "EVENT_KINDS", "TraceEvent", "SchedTracer", "TraceSummary", "summarize",
@@ -123,7 +124,16 @@ class SchedTracer:
             raise ValueError(f"unknown kinds {sorted(self.kinds - EVENT_KINDS)}")
         self._events: deque = deque(maxlen=capacity)
         self._emitted = 0
-        self._mu = threading.Lock()
+        self._mu: ContextManager = threading.Lock()
+
+    def set_threadsafe(self, threadsafe: bool) -> None:
+        """Swap the append mutex for a no-op guard (or back).
+
+        The sim backend is a single-threaded event loop, so the core calls
+        ``set_threadsafe(False)`` at attach time and every emit skips the
+        lock; live mode keeps the real mutex because ``LiveLock`` paths
+        emit outside the core guard."""
+        self._mu = threading.Lock() if threadsafe else nullcontext()
 
     # ------------------------------------------------------------------
     def emit(self, kind: str, t: float, slot: Optional[int] = None,

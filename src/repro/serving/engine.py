@@ -30,6 +30,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -82,7 +83,7 @@ class InferenceEngine:
         self.caches = model.init_cache(max_batch, max_len)
         self.lengths = np.zeros((max_batch,), np.int32)
         self.active: dict[int, Request] = {}     # slot -> request
-        self.pending: list = []
+        self.pending: deque = deque()    # FIFO admission; popleft is O(1)
         self._lock = threading.Lock()
         self.completed: list = []
         self._decode = jax.jit(model.decode_step)
@@ -145,7 +146,7 @@ class InferenceEngine:
             slot = self.pool.alloc(self._job, str(req.rid))
             if slot is None:
                 return                       # pool exhausted: retry next chunk
-            self.pending.pop(0)
+            self.pending.popleft()
             # single-request prefill into the pooled cache at `slot`
             plen = len(req.prompt)
             batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}

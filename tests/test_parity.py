@@ -33,7 +33,7 @@ class RecordingUFS(UFSPolicy):
             for s in self.kernel.slots:
                 if any(q.state == JobState.RUNNABLE
                        and q.tier == Tier.TIME_SENSITIVE
-                       for _, _, q in s.local_dsq._items):
+                       for q in s.local_dsq.jobs()):
                     self.violations += 1
                     break
         super().running(job, slot)

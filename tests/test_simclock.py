@@ -1,0 +1,101 @@
+"""Unit tests for the cancellable discrete-event clock."""
+from repro.core import Job, SchedKernel, Tier, make_policy
+from repro.core.kernel import SimClock
+from repro.core.workloads import bound_worker, bursty_worker
+
+
+def test_ordering_and_processed_count():
+    clock = SimClock()
+    fired = []
+    clock.at(1.0, lambda: fired.append("a"))
+    clock.at(1.0, lambda: fired.append("b"))   # same t: schedule order wins
+    clock.at(0.5, lambda: fired.append("c"))
+    clock.run_until(2.0)
+    assert fired == ["c", "a", "b"]
+    assert clock.processed == 3
+    assert clock.now == 2.0
+
+
+def test_cancel_prevents_execution():
+    clock = SimClock()
+    fired = []
+    ev = clock.after(1.0, lambda: fired.append("x"))
+    clock.after(2.0, lambda: fired.append("y"))
+    assert clock.cancel(ev) is True
+    assert clock.cancel(ev) is False           # second cancel is a no-op
+    clock.run_until(3.0)
+    assert fired == ["y"]
+    assert clock.processed == 1
+
+
+def test_cancel_after_execution_is_noop():
+    clock = SimClock()
+    ev = clock.after(0.5, lambda: None)
+    clock.run_until(1.0)
+    assert clock.cancel(ev) is False
+    assert len(clock) == 0 and clock.empty()
+
+
+def test_event_cancelling_itself_from_callback():
+    """A callback cancelling its own (already-popped) handle must not
+    corrupt the dead-cell accounting."""
+    clock = SimClock()
+    handles = []
+    clock.after(1.0, lambda: clock.cancel(handles[0]))
+    handles.append(clock._heap[0])
+    clock.after(2.0, lambda: None)
+    clock.run_until(3.0)
+    assert clock.processed == 2
+    assert len(clock) == 0 and clock.empty()
+
+
+def test_past_events_clamp_to_now():
+    clock = SimClock()
+    fired = []
+    clock.run_until(5.0)
+    clock.at(1.0, lambda: fired.append(clock.now))
+    clock.run_until(6.0)
+    assert fired == [5.0]                      # never travels back in time
+
+
+def test_compaction_bounds_heap_size():
+    clock = SimClock()
+    evs = [clock.after(10.0 + i, lambda: None) for i in range(1000)]
+    for ev in evs[:900]:
+        clock.cancel(ev)
+    assert len(clock) == 100
+    # Lazy deletion plus compaction: the raw heap stays near the live count.
+    assert clock.heap_size < 300
+    clock.run_until(2000.0)
+    assert clock.processed == 100
+
+
+def test_live_len_and_empty_track_cancellation():
+    clock = SimClock()
+    a = clock.after(1.0, lambda: None)
+    b = clock.after(2.0, lambda: None)
+    assert len(clock) == 2 and not clock.empty()
+    clock.cancel(a)
+    assert len(clock) == 1
+    clock.cancel(b)
+    assert len(clock) == 0 and clock.empty()
+
+
+def test_sim_run_leaves_no_stale_run_end_events():
+    """Preempt/slice churn used to leave one dead closure per stop in the
+    heap; with cancellation the heap stays bounded by live timers."""
+    k = SchedKernel(2, make_policy("ufs"), seed=1)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    for i in range(4):
+        k.add_job(Job(ts, behavior=bursty_worker(i), name=f"t{i}",
+                      kind="bursty"))
+    for i in range(8):
+        k.add_job(Job(bg, behavior=bound_worker(100 + i, query_cpu=0.02),
+                      name=f"b{i}", kind="bound"))
+    k.run(2.0)
+    # Live events: at most one run-end per slot plus one block timer per
+    # sleeping job -- nowhere near the thousands of stops that occurred.
+    assert len(k.clock) <= 2 + 12
+    assert k.clock.heap_size <= 2 * (2 + 12) + 64
+    assert k.metrics.preemptions + k.metrics.dispatches > 0
