@@ -14,7 +14,10 @@ Public surface:
 * workload generators for the paper's experiments
 """
 from .task import (Job, JobState, Tier, WorkloadGroup, Burst, Block,
-                   RequestBegin, RequestEnd, Exit)
+                   RequestBegin, RequestEnd, Exit, RetryPolicy)
+from .faults import (FaultInjected, FaultInjector, crashing_chunk,
+                     crashy_behavior, crashing_holder, occupy_lock,
+                     drain_after)
 from .trace import (SchedTracer, TraceEvent, TraceSummary, summarize,
                     busy_intervals, slot_busy_from_trace, wakeup_delays,
                     detect_inversions, to_chrome_trace, write_chrome_trace,
@@ -31,7 +34,9 @@ from .policies import make_policy, POLICIES
 
 __all__ = [
     "Job", "JobState", "Tier", "WorkloadGroup", "Burst", "Block",
-    "RequestBegin", "RequestEnd", "Exit",
+    "RequestBegin", "RequestEnd", "Exit", "RetryPolicy",
+    "FaultInjected", "FaultInjector", "crashing_chunk", "crashy_behavior",
+    "crashing_holder", "occupy_lock", "drain_after",
     "SchedCore", "Executor", "Policy", "Slot", "DEFAULT_SLICE",
     "SchedKernel", "SimClock", "SimExecutor",
     "LiveKernel", "LiveJob", "LiveLock", "ThreadExecutor",

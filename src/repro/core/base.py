@@ -183,6 +183,26 @@ class Executor(ABC):
     def job_preempted(self, job: Job, slot: Slot, used: float) -> None:
         """Continuation for a job forced off a slot mid-execution."""
 
+    def release_held_locks(self, job: Job) -> None:
+        """Force-release every engine lock the job still holds (panic /
+        exit containment).  The sim backend overrides this to resume
+        parked waiters that the release hands the lock to."""
+        for lock in list(job.held_locks):
+            lock.release(job)
+
+    def restart_job(self, job: Job) -> bool:
+        """Prepare a faulted job for a retry restart; False if this
+        backend cannot restart it (quarantine instead).  Live chunks are
+        plain callables and re-invoke naturally; the sim backend needs a
+        ``behavior_factory`` to rebuild the dead generator."""
+        return True
+
+    def resume_retry(self, job: Job) -> None:
+        """Re-admit a restarted job after its backoff delay: live wakes it
+        (the chunk re-runs on dispatch); sim re-enters the phase machinery
+        so the rebuilt generator wakes itself at its first burst."""
+        self.core.wake(job)
+
     def interrupt(self, slot: Slot) -> None:
         """Force the current job off ``slot`` (drain): sim preempts at the
         current event; threads request a chunk-boundary stop."""
@@ -365,6 +385,59 @@ class SchedCore:
         self.stop_job(slot, used, reason="preempt")
         self.executor.job_preempted(job, slot, used)
         self.schedule_next(slot)
+
+    # ------------------------------------------------------ fault containment
+    def panic_job(self, job: Job, slot: Optional[Slot] = None,
+                  exc: Optional[BaseException] = None, trace_back: str = "",
+                  reason: str = "exception") -> None:
+        """Contain a faulted job (DESIGN.md section 12).
+
+        The one panic path for both backends: trace + count the panic,
+        force-release the job's held locks (resuming any waiter the
+        release hands a lock to), purge its hint-table entries so boosts
+        it caused or carried expire now, notify ``on_panic``, then either
+        restart the job under its :class:`~repro.core.task.RetryPolicy`
+        (bounded, exponential backoff) or quarantine it to EXITED.  The
+        job must already be off its slot (``stop_job`` ran)."""
+        with self.executor.guard():
+            if job.state == JobState.EXITED:
+                return
+            job.panic = True
+            job.last_panic = repr(exc) if exc is not None else reason
+            self.metrics.panics.append(job.name)
+            if self._traced:
+                self.trace("panic", job=job,
+                           slot=slot.sid if slot is not None else None,
+                           reason=reason, error=job.last_panic,
+                           traceback=trace_back, retries=job.retries)
+            self.executor.release_held_locks(job)
+            self.hints.purge_job(job)
+            if self.on_panic is not None:
+                self.on_panic(job)
+            pol = job.retry_policy
+            if (pol is not None and job.retries < pol.max_retries
+                    and self.executor.restart_job(job)):
+                job.retries += 1
+                self.metrics.retries += 1
+                job.state = JobState.BLOCKED
+                delay = pol.delay(job.retries)
+                if self._traced:
+                    self.trace("retry", job=job, attempt=job.retries,
+                               delay=delay)
+                self.executor.defer(delay,
+                                    lambda: self.executor.resume_retry(job))
+            else:
+                self.quarantine_job(job)
+
+    def quarantine_job(self, job: Job) -> None:
+        """Poison a crash-looping job: EXITED for good, never re-woken
+        (``wake`` refuses EXITED jobs), counted and traced."""
+        with self.executor.guard():
+            job.quarantined = True
+            job.state = JobState.EXITED
+            self.metrics.quarantines += 1
+            if self._traced:
+                self.trace("quarantine", job=job, retries=job.retries)
 
     # ----------------------------------------------------------- hint wiring
     def _hint_boost(self, job: Job) -> None:

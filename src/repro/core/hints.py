@@ -51,19 +51,44 @@ class HintTable:
         self._maybe_boost(lock_id)
 
     def report_wait_end(self, job: Job, lock_id: int) -> None:
-        """pgstat_report_wait_end analogue."""
+        """pgstat_report_wait_end analogue.
+
+        Also re-evaluates the holder's boost: a waiter that leaves
+        *without* acquiring (acquire timeout, panic) may have been the
+        time-sensitive waiter the boost exists for, and the boost must
+        expire with the wait, not with the lock -- otherwise a timed-out
+        waiter leaves the holder boosted indefinitely."""
         self.writes += 1
         w = self.waiters.get(lock_id)
         if w and job in w:
             w.remove(job)
             if not w:
                 del self.waiters[lock_id]
+            self._reevaluate(lock_id)
 
     def report_lock_released(self, job: Job, lock_id: int) -> None:
         self.writes += 1
         if self.holders.get(lock_id) is job:
             del self.holders[lock_id]
         self._unboost(job, lock_id)
+
+    def purge_job(self, job: Job) -> None:
+        """Remove every trace of ``job`` from the table (panic/quarantine
+        containment, DESIGN.md section 12): wait entries it would otherwise
+        leak, its own boost residue, and any holder entries still naming it
+        after its locks were force-released outside the normal path.  Boosts
+        other holders carry on this job's behalf are re-evaluated so they
+        expire with the dead waiter."""
+        for lock_id in [lid for lid, w in self.waiters.items() if job in w]:
+            self.report_wait_end(job, lock_id)
+        reasons = self._boost_reasons.pop(job.jid, None)
+        if reasons and job.boosted:
+            job.boosted = False
+            job.boost_group = None
+            if self.on_unboost is not None:
+                self.on_unboost(job)
+        for lock_id in [lid for lid, h in self.holders.items() if h is job]:
+            del self.holders[lock_id]
 
     # ------------------------------------------------------------ scheduler side
     def _maybe_boost(self, lock_id: int) -> None:
@@ -87,6 +112,20 @@ class HintTable:
             self.boosts += 1
             if self.on_boost is not None:
                 self.on_boost(holder)
+
+    def _reevaluate(self, lock_id: int) -> None:
+        """A waiter left without acquiring: if no time-sensitive waiter
+        remains, retract the holder's boost reason for this lock.  On the
+        normal hand-off path the releasing holder is already gone from
+        ``holders`` by the time the new owner reports wait-end, so this is
+        a no-op there."""
+        holder = self.holders.get(lock_id)
+        if holder is None:
+            return
+        waiters = self.waiters.get(lock_id, ())
+        if any(w.tier == Tier.TIME_SENSITIVE for w in waiters):
+            return
+        self._unboost(holder, lock_id)
 
     def _unboost(self, holder: Job, lock_id: int) -> None:
         reasons = self._boost_reasons.get(holder.jid)

@@ -23,6 +23,7 @@ only mutate queue state and request kicks, exactly as eBPF callbacks do.
 from __future__ import annotations
 
 import heapq
+import traceback
 import warnings
 from contextlib import nullcontext
 from typing import Callable, ContextManager, Optional
@@ -228,6 +229,11 @@ class SimExecutor(Executor):
             except StopIteration:
                 self._exit(job)
                 return
+            except Exception as e:               # noqa: BLE001
+                # Behaviour crashed mid-phase: the sim analogue of a live
+                # chunk raising -- contain it (locks, hints, retry policy).
+                core.panic_job(job, exc=e, trace_back=traceback.format_exc())
+                return
             if isinstance(ph, Burst):
                 job.burst_remaining = ph.duration
                 job.current_request = ph.request_id
@@ -269,11 +275,10 @@ class SimExecutor(Executor):
                     woken.resume_value = True
                     self.advance(woken)              # hand-off: waiter proceeds
             elif isinstance(ph, PanicExit):
-                job.panic = True
-                core.metrics.panics.append(job.name)
-                if core.on_panic is not None:
-                    core.on_panic(job)
-                self._exit(job)
+                # Stuck-spinlock watchdog: same containment path as a
+                # crashed behaviour (PostgreSQL PANICs the process; a job
+                # with a RetryPolicy models the restarted backend).
+                core.panic_job(job, reason="stuck_spinlock")
                 return
             elif isinstance(ph, Exit):
                 self._exit(job)
@@ -283,8 +288,30 @@ class SimExecutor(Executor):
 
     def _exit(self, job: Job) -> None:
         job.state = JobState.EXITED
+        self.release_held_locks(job)
+
+    def release_held_locks(self, job: Job) -> None:
+        """Sleep-discipline releases hand the lock to a parked waiter; a
+        job exiting (or panicking) with waiters parked must resume them or
+        they sleep forever holding a granted lock."""
         for lock in list(job.held_locks):
-            lock.release(job)
+            woken = lock.release(job)
+            if woken is not None:
+                woken.resume_value = True
+                self.advance(woken)
+
+    def restart_job(self, job: Job) -> bool:
+        factory = job.behavior_factory
+        if factory is None:
+            return False                 # dead generator, no way to rebuild
+        job.behavior = factory()
+        job.resume_value = None
+        job.burst_remaining = 0.0
+        job.current_request = None
+        return True
+
+    def resume_retry(self, job: Job) -> None:
+        self.advance(job)                # fresh generator wakes at its burst
 
 
 class SchedKernel(SchedCore):

@@ -24,6 +24,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import traceback
 import warnings
 from contextlib import contextmanager
 from typing import Callable, ContextManager, Optional
@@ -39,9 +40,9 @@ _live_ids = itertools.count(1)
 
 class LiveJob(Job):
     def __init__(self, group, run_chunk: Callable[[float], str],
-                 name: str = "", kind: str = "live"):
+                 name: str = "", kind: str = "live", retry_policy=None):
         super().__init__(group, behavior=None, name=name or f"live{next(_live_ids)}",
-                         kind=kind)
+                         kind=kind, retry_policy=retry_policy)
         self._run_chunk = run_chunk
 
 
@@ -163,15 +164,22 @@ class ThreadExecutor(Executor):
                 budget = slot.slice_budget
                 runner = getattr(job, "_run_chunk", None) or job.run_chunk
             t0 = time.monotonic()
+            err: Optional[BaseException] = None
+            tb = ""
             try:
                 status = runner(budget)              # real work, no lock held
-            except Exception:                        # noqa: BLE001
-                status = "done"
+            except Exception as e:                   # noqa: BLE001
+                # A crashed chunk is a *panic*, not a completion: traced,
+                # counted, locks force-released, retry policy applied.
+                status = "panic"
+                err, tb = e, traceback.format_exc()
             used = time.monotonic() - t0
             with self._cond:
                 core.stop_job(slot, used, reason=status)  # shared stop bookkeeping
                 self._preempt.discard(slot.sid)
-                if status == "done":
+                if status == "panic":
+                    core.panic_job(job, slot=slot, exc=err, trace_back=tb)
+                elif status == "done":
                     job.state = JobState.EXITED
                 elif status == "blocked":
                     job.state = JobState.BLOCKED
@@ -256,6 +264,13 @@ class LiveLock:
                 self.kernel.hints.report_wait_start(job, self.lock_id)
             ok = self._lock.acquire(timeout=timeout)
             if not ok:
+                # Timed out: retract the wait entry, or the hint table
+                # keeps boosting the holder on behalf of a waiter that
+                # gave up long ago (unbounded priority inversion).
+                self.kernel.trace("lock_timeout", job=job, lock=self.name,
+                                  lock_id=self.lock_id)
+                if self.kernel.hints_enabled:
+                    self.kernel.hints.report_wait_end(job, self.lock_id)
                 return False
         self.holder = job
         job.held_locks.add(self)
@@ -267,6 +282,12 @@ class LiveLock:
         return True
 
     def release(self, job: Job) -> None:
+        if self.holder is not job:
+            # Already force-released by the panic path (or never held):
+            # releasing the raw threading.Lock again would raise in
+            # whatever thread got here second.
+            job.held_locks.discard(self)
+            return
         self.holder = None
         job.held_locks.discard(self)
         self.kernel.trace("lock_release", job=job, lock=self.name,

@@ -36,6 +36,8 @@ class Metrics:
         self.dispatches: int = 0
         self.lb_migrations: int = 0
         self.panics: list[str] = []
+        self.retries: int = 0               # panic-path restarts granted
+        self.quarantines: int = 0           # jobs poisoned after retries ran out
         self.window_start: float = 0.0
         self.window_end: float = 0.0
 
@@ -123,13 +125,21 @@ class Metrics:
         if groups is None:
             groups = sorted(set(self.completed) | set(self.request_latency)
                             | set(self.cpu_by_group) | set(self.wakeup_latency))
+        counters = {"preemptions": self.preemptions, "kicks": self.kicks,
+                    "dispatches": self.dispatches,
+                    "lb_migrations": self.lb_migrations,
+                    "panics": list(self.panics)}
+        # Fault counters appear only on faulting runs: fault-free summaries
+        # stay byte-identical to the committed microbench baseline
+        # (BENCH_8.json compares summary hashes exactly).
+        if self.retries:
+            counters["retries"] = self.retries
+        if self.quarantines:
+            counters["quarantines"] = self.quarantines
         out = {
             "window": {"start": self.window_start, "end": self.window_end,
                        "duration": max(0.0, self.window_end - self.window_start)},
-            "counters": {"preemptions": self.preemptions, "kicks": self.kicks,
-                         "dispatches": self.dispatches,
-                         "lb_migrations": self.lb_migrations,
-                         "panics": list(self.panics)},
+            "counters": counters,
             "groups": {
                 g: {"completed": self.completed.get(g, 0),
                     "throughput": self.throughput(g),

@@ -19,6 +19,25 @@ from dataclasses import dataclass, field
 from typing import Callable, Iterator, Optional
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Per-job restart policy applied by the panic path (DESIGN.md
+    section 12): a faulted job is restarted up to ``max_retries`` times
+    with exponential backoff, then quarantined (EXITED, ``quarantined``
+    set) so a crash-looping job can never occupy the scheduler forever.
+    Jobs without a policy quarantine on the first panic."""
+
+    max_retries: int = 3
+    backoff: float = 0.005          # delay before the first restart
+    backoff_growth: float = 2.0
+    max_backoff: float = 0.25
+
+    def delay(self, attempt: int) -> float:
+        """Restart delay before retry ``attempt`` (1-based)."""
+        return min(self.backoff * self.backoff_growth ** (attempt - 1),
+                   self.max_backoff)
+
+
 class Tier(enum.IntEnum):
     """UFS scheduling tiers. Lower value = higher precedence."""
 
@@ -182,11 +201,16 @@ class Job:
         run_chunk: Optional[Callable[[float], tuple]] = None,
         name: Optional[str] = None,
         kind: str = "generic",
+        behavior_factory: Optional[Callable[[], Iterator[Phase]]] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         self.jid = next(_job_ids)
         self.name = name or f"job{self.jid}"
         self.kind = kind                      # "bursty" / "bound" / ... for metrics
         self.group = group
+        self.behavior_factory = behavior_factory
+        if behavior is None and behavior_factory is not None:
+            behavior = behavior_factory()
         self.behavior = behavior
         self.run_chunk = run_chunk
         self.state = JobState.NEW
@@ -212,7 +236,12 @@ class Job:
         self.total_cpu: float = 0.0
         self.completed_requests: int = 0
         self.held_locks: set = set()
-        self.panic: bool = False              # spinlock watchdog fired
+        # --- fault containment state (DESIGN.md section 12) ---
+        self.panic: bool = False              # a panic path fired for this job
+        self.retry_policy = retry_policy      # None -> quarantine on first panic
+        self.retries: int = 0                 # restarts consumed so far
+        self.quarantined: bool = False        # EXITED via the quarantine path
+        self.last_panic: str = ""             # repr of the last fault cause
 
     # Effective tier seen by the scheduler (boost lifts BG jobs into TS).
     @property

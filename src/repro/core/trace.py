@@ -64,6 +64,10 @@ EVENT_KINDS = frozenset({
     "lock_release",    # lock released
     "slot_add",        # elastic scale-up
     "slot_drain",      # slot taken offline
+    "lock_timeout",    # acquire gave up waiting (args: lock, lock_id)
+    "panic",           # job faulted (args: reason, error, traceback, retries)
+    "retry",           # panic path restarting the job (args: attempt, delay)
+    "quarantine",      # retries exhausted: job poisoned to EXITED
 })
 
 DEFAULT_CAPACITY = 1 << 16
@@ -414,7 +418,8 @@ def to_chrome_trace(events: list, end: Optional[float] = None) -> dict:
                        "args": {k: v for k, v in a.items()}})
             if ev.slot not in slots_seen:
                 slots_seen.append(ev.slot)
-        elif ev.kind in ("wake", "boost", "unboost"):
+        elif ev.kind in ("wake", "boost", "unboost",
+                         "panic", "retry", "quarantine"):
             te.append({"name": ev.kind, "ph": "i", "s": "t",
                        "pid": PID_GROUPS, "tid": group_tid(ev.group),
                        "ts": _us(ev.t), "args": dict(a, job=ev.job)})
@@ -437,6 +442,11 @@ def to_chrome_trace(events: list, end: Optional[float] = None) -> dict:
                        "tid": a.get("lock_id", 0), "ts": _us(ev.t),
                        "args": {"waiter": ev.job,
                                 "holder": a.get("holder", "")}})
+        elif ev.kind == "lock_timeout":
+            te.append({"name": f"timeout:{a.get('lock', 'lock')}", "ph": "i",
+                       "s": "t", "pid": PID_LOCKS,
+                       "tid": a.get("lock_id", 0), "ts": _us(ev.t),
+                       "args": {"waiter": ev.job}})
 
     for sid in sorted(slots_seen):
         te.append({"ph": "M", "pid": PID_SLOTS, "tid": sid, "ts": 0,

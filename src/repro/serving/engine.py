@@ -51,17 +51,23 @@ class Request:
     max_new_tokens: int = 16
     tier: str = "time-sensitive"        # SET task_tier analogue
     weight: float = 10_000.0            # SET task_weight analogue
+    deadline_s: Optional[float] = None  # fail if not finished within this
     rid: int = field(default_factory=lambda: next(_req_ids))
     submitted: float = 0.0
     first_token: Optional[float] = None
     finished: Optional[float] = None
     tokens: list = field(default_factory=list)
     slot: Optional[int] = None
+    error: Optional[str] = None         # "deadline" / "shutdown" when failed
     done_event: threading.Event = field(default_factory=threading.Event)
 
     @property
     def latency(self) -> Optional[float]:
         return None if self.finished is None else self.finished - self.submitted
+
+    @property
+    def ok(self) -> bool:
+        return self.finished is not None and self.error is None
 
 
 class InferenceEngine:
@@ -96,8 +102,63 @@ class InferenceEngine:
         self._running = True
         self.kernel.wake(self._job)
 
-    def stop(self) -> None:
-        self._running = False
+    def stop(self, drain: bool = True) -> None:
+        """Graceful shutdown.  With ``drain`` (default) whatever is still
+        in flight is *failed now*: never-admitted pending requests and
+        mid-decode active requests get ``error="shutdown"`` and their
+        ``done_event`` set, and active cache slots go back to the pool.
+        With ``drain=False`` the loop finishes the in-flight batch first.
+        Either way the blocked decode loop is woken so it observes the
+        shutdown and exits instead of sleeping forever."""
+        with self._lock:
+            self._running = False
+            if drain:
+                while self.pending:
+                    self._fail_locked(self.pending.popleft(), "shutdown")
+                for slot in list(self.active):
+                    self._fail_locked(self.active[slot], "shutdown", slot=slot)
+        # Wake the (possibly parked) decode loop so it observes the
+        # shutdown.  A chunk that already decided "blocked" may not have
+        # parked yet, and waking a running job would double-dispatch it,
+        # so wait for the job to settle before waking -- bounded, not
+        # best-effort: a parked loop never wakes itself.
+        deadline = time.monotonic() + 2.0
+        while time.monotonic() < deadline:
+            state = self._job.state.value
+            if state == "blocked":
+                self.kernel.wake(self._job)
+                return
+            if state in ("exited", "new"):
+                return                       # already done / never started
+            time.sleep(0.001)                # running/runnable: let it land
+
+    def _fail_locked(self, req: Request, error: str,
+                     slot: Optional[int] = None) -> None:
+        """Fail a request (deadline / shutdown): mark it, wake its waiter,
+        and release its cache slot.  Caller holds ``self._lock``."""
+        req.error = error
+        req.finished = time.monotonic()
+        if slot is not None:
+            self.active.pop(slot, None)
+            self.lengths[slot] = 0
+            self.pool.release(self._job, slot)
+        self.completed.append(req)
+        req.done_event.set()
+
+    def _expire_locked(self, now: float) -> None:
+        """Fail every request whose deadline has passed: pending requests
+        before they occupy a slot, active ones releasing theirs.  Caller
+        holds ``self._lock``."""
+        expired = [r for r in self.pending
+                   if r.deadline_s is not None
+                   and now - r.submitted > r.deadline_s]
+        for req in expired:
+            self.pending.remove(req)
+            self._fail_locked(req, "deadline")
+        for slot, req in list(self.active.items()):
+            if (req.deadline_s is not None
+                    and now - req.submitted > req.deadline_s):
+                self._fail_locked(req, "deadline", slot=slot)
 
     def submit(self, req: Request) -> Request:
         req.submitted = time.monotonic()
@@ -163,6 +224,7 @@ class InferenceEngine:
         engine lock for the whole read->decode->write cycle (the decode
         replaces every cache row, see the locking discipline above)."""
         with self._lock:
+            self._expire_locked(time.monotonic())
             self._admit_locked()
             if not self.active:
                 return "blocked" if self._running else "done"

@@ -1,0 +1,391 @@
+"""Fault containment: panic path, lock hygiene, retry/quarantine, and the
+crash-injection harness (DESIGN.md section 12).
+
+The end-to-end containment tests are the acceptance shape of ISSUE 9: a
+background job that raises *while holding an engine lock* must be traced
+and counted as a panic, its lock force-released, its boost expired, the
+waiting time-sensitive job must proceed, and after N failed retries the
+job must be quarantined -- under both the sim and the thread backend.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (Job, RetryPolicy, SchedKernel, SchedTracer, Tier,
+                        make_policy)
+from repro.core.faults import (FaultInjected, FaultInjector, crashing_chunk,
+                               crashing_holder, crashy_behavior, occupy_lock)
+from repro.core.live import LiveJob, LiveKernel, LiveLock
+from repro.core.task import (AcquireLock, Block, Burst, JobState, ReleaseLock,
+                             RequestBegin, RequestEnd)
+from repro.core.locks import spin_acquire
+
+
+def _wait_for(cond, timeout=5.0, interval=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+def _kinds(tracer):
+    return [ev.kind for ev in tracer.events]
+
+
+# ---------------------------------------------------------------------------
+# Injector harness
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_deterministically():
+    inj = FaultInjector({"chunk": 3})
+    assert [inj.fires("chunk") for _ in range(5)] == [False, False, True,
+                                                     False, False]
+    assert inj.hits["chunk"] == 5 and inj.fired["chunk"] == 1
+    # unplanned sites never fire but are still counted
+    assert not inj.fires("other") and inj.hits["other"] == 1
+
+
+def test_injector_repeat_models_crash_loop():
+    inj = FaultInjector({"chunk": 2}, repeat=True)
+    assert [inj.fires("chunk") for _ in range(4)] == [False, True, True, True]
+    with pytest.raises(FaultInjected):
+        inj.check("chunk")
+
+
+def test_crashy_behavior_raises_mid_stream():
+    inj = FaultInjector({"sim": 2})
+    gen = crashy_behavior(inj, [Burst(1e-3), Burst(1e-3), Burst(1e-3)],
+                          site="sim")
+    assert isinstance(next(gen), Burst)
+    with pytest.raises(FaultInjected):
+        next(gen)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: LiveLock.acquire timeout must not leak the wait entry
+# ---------------------------------------------------------------------------
+
+def test_livelock_timeout_cleans_wait_entry_and_boost():
+    tracer = SchedTracer()
+    k = LiveKernel(1, make_policy("ufs"), tracer=tracer)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = LiveLock(k, "shared")
+    holder = LiveJob(bg, lambda b: "yield", name="holder")
+    waiter = LiveJob(ts, lambda b: "yield", name="waiter")
+
+    assert lock.acquire(holder)
+    assert not lock.acquire(waiter, timeout=0.05)
+    # The boost fired while the TS waiter was registered...
+    assert k.hints.boosts == 1
+    # ...but the timeout retracted the wait entry and expired the boost,
+    # instead of leaving the holder boosted forever.
+    assert k.hints.waiters == {}
+    assert holder.boosted is False
+    assert "lock_timeout" in _kinds(tracer)
+    lock.release(holder)
+    assert holder.held_locks == set()
+
+
+def test_occupy_lock_drives_timeout_path():
+    k = LiveKernel(1, make_policy("ufs"))
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = LiveLock(k, "occupied")
+    squatter = LiveJob(bg, lambda b: "yield", name="squatter")
+    victim = LiveJob(bg, lambda b: "yield", name="victim")
+    release = occupy_lock(lock, squatter)
+    try:
+        assert not lock.acquire(victim, timeout=0.02)
+    finally:
+        release.set()
+    assert _wait_for(lambda: lock.holder is None)
+    assert lock.acquire(victim, timeout=1.0)
+    lock.release(victim)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: worker exceptions are panics, not silent "done"
+# ---------------------------------------------------------------------------
+
+def test_live_worker_exception_routes_to_panic():
+    tracer = SchedTracer()
+    k = LiveKernel(1, make_policy("ufs"), tracer=tracer)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+
+    def chunk(budget):
+        raise ValueError("boom in chunk")
+    job = LiveJob(bg, chunk, name="crasher")
+
+    k.start()
+    k.wake(job)
+    assert _wait_for(lambda: job.state == JobState.EXITED)
+    k.stop()
+
+    assert k.metrics.panics == ["crasher"]
+    assert job.panic and job.quarantined
+    assert "ValueError" in job.last_panic
+    panics = [ev for ev in tracer.events if ev.kind == "panic"]
+    assert len(panics) == 1
+    # the traceback is captured in the trace event, not swallowed
+    assert "ValueError: boom in chunk" in panics[0].args["traceback"]
+    stops = [ev for ev in tracer.events if ev.kind == "stop_job"]
+    assert stops and stops[-1].args["reason"] == "panic"
+
+
+def test_live_retry_then_quarantine():
+    tracer = SchedTracer()
+    k = LiveKernel(1, make_policy("ufs"), tracer=tracer)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    inj = FaultInjector({"chunk": 1}, repeat=True)      # crash every chunk
+    job = LiveJob(bg, crashing_chunk(inj), name="looper",
+                  retry_policy=RetryPolicy(max_retries=2, backoff=0.005))
+
+    k.start()
+    k.wake(job)
+    assert _wait_for(lambda: job.quarantined)
+    k.stop()
+
+    assert job.retries == 2
+    assert k.metrics.panics == ["looper"] * 3           # initial + 2 retries
+    assert k.metrics.retries == 2 and k.metrics.quarantines == 1
+    kinds = _kinds(tracer)
+    assert kinds.count("panic") == 3
+    assert kinds.count("retry") == 2
+    assert kinds.count("quarantine") == 1
+    # quarantined for good: wake() must refuse the poisoned job
+    k.wake(job)
+    assert job.state == JobState.EXITED
+    # summary surfaces the fault counters on faulting runs
+    counters = k.metrics.summary()["counters"]
+    assert counters["retries"] == 2 and counters["quarantines"] == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end containment (the acceptance scenario), sim backend
+# ---------------------------------------------------------------------------
+
+def test_sim_panic_containment_end_to_end():
+    tracer = SchedTracer()
+    k = SchedKernel(1, make_policy("ufs"), tracer=tracer)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = k.create_lock("shared")
+
+    holder = Job(bg, behavior_factory=crashing_holder(lock, hold_cpu=5e-3),
+                 name="crashy-holder", kind="bound",
+                 retry_policy=RetryPolicy(max_retries=1, backoff=1e-3))
+
+    def waiter_behavior():
+        yield Block(1e-3)            # let the holder take the lock first
+        yield RequestBegin()
+        yield AcquireLock(lock)
+        yield Burst(1e-3)
+        yield ReleaseLock(lock)
+        yield RequestEnd()
+    waiter = Job(ts, behavior=waiter_behavior(), name="ts-waiter",
+                 kind="bursty")
+
+    k.add_job(holder)
+    k.add_job(waiter)
+    m = k.run(1.0)
+
+    # panic traced + counted, retried once, then quarantined
+    assert m.panics == ["crashy-holder"] * 2
+    assert m.retries == 1 and m.quarantines == 1
+    assert holder.quarantined and holder.state == JobState.EXITED
+    # lock force-released and boost expired
+    assert lock.holder is None and holder.held_locks == set()
+    assert holder.boosted is False
+    assert k.hints.waiters == {} and k.hints._boost_reasons == {}
+    # the waiting time-sensitive job proceeded to completion
+    assert waiter.completed_requests == 1
+    kinds = _kinds(tracer)
+    assert kinds.count("panic") == 2
+    assert kinds.count("retry") == 1
+    assert kinds.count("quarantine") == 1
+    assert "boost" in kinds          # the inversion actually happened
+
+
+def test_sim_exit_while_holding_hands_off_to_parked_waiter():
+    """A job that *exits* (not panics) holding a sleep-discipline lock must
+    resume the parked waiter the release grants the lock to."""
+    k = SchedKernel(1, make_policy("ufs"))
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = k.create_lock("leaky")
+
+    def holder_then_exit():
+        yield AcquireLock(lock)
+        yield Burst(2e-3)            # StopIteration while holding the lock
+
+    def waiter_behavior():
+        yield Block(0.5e-3)
+        yield RequestBegin()
+        yield AcquireLock(lock)
+        yield Burst(0.5e-3)
+        yield ReleaseLock(lock)
+        yield RequestEnd()
+    waiter = Job(ts, behavior=waiter_behavior(), name="parked-waiter")
+
+    k.add_job(Job(bg, behavior=holder_then_exit(), name="exiting-holder"))
+    k.add_job(waiter)
+    k.run(1.0)
+    assert waiter.completed_requests == 1
+    assert waiter.state == JobState.EXITED
+    assert lock.holder is None
+
+
+def test_sim_panic_without_factory_quarantines_immediately():
+    """A retry policy cannot restart a dead generator without a
+    behavior_factory: the job is quarantined instead of crash-looping."""
+    k = SchedKernel(1, make_policy("ufs"))
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+
+    def crashes():
+        yield Burst(1e-3)
+        raise FaultInjected("no factory")
+    job = Job(bg, behavior=crashes(), name="one-shot",
+              retry_policy=RetryPolicy(max_retries=5))
+    k.add_job(job)
+    m = k.run(0.5)
+    assert m.panics == ["one-shot"]
+    assert m.retries == 0 and m.quarantines == 1
+    assert job.quarantined
+
+
+def test_spinlock_panic_exit_quarantines():
+    """The stuck-spinlock watchdog (PanicExit) flows through the same
+    containment path: counted, quarantined, locks clean."""
+    k = SchedKernel(2, make_policy("ufs"))
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    lock = k.create_lock("stuck")
+
+    def stuck_holder():
+        yield AcquireLock(lock)
+        while True:
+            yield Burst(1e-3)        # never releases
+
+    def spinner():
+        yield Burst(1e-4)
+        yield from spin_acquire(lock, panic_attempts=3)
+        yield ReleaseLock(lock)
+    victim = Job(ts, behavior=spinner(), name="spinner")
+
+    k.add_job(Job(ts, behavior=stuck_holder(), name="stuck-holder"))
+    k.add_job(victim)
+    m = k.run(1.0)
+    assert m.panics == ["spinner"]
+    assert m.quarantines == 1
+    assert victim.panic and victim.quarantined
+    assert victim.held_locks == set()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end containment (the acceptance scenario), live backend
+# ---------------------------------------------------------------------------
+
+def test_live_panic_containment_end_to_end():
+    tracer = SchedTracer()
+    k = LiveKernel(2, make_policy("ufs"), tracer=tracer)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    lock = k.create_lock("shared")
+    waiter_done = threading.Event()
+
+    holder = LiveJob(bg, lambda b: "yield", name="crashy-holder",
+                     retry_policy=RetryPolicy(max_retries=1, backoff=0.01))
+
+    def holder_chunk(budget):
+        lock.acquire(holder)
+        time.sleep(0.05)             # hold while the TS waiter arrives
+        raise RuntimeError("boom while holding")
+    holder._run_chunk = holder_chunk
+
+    waiter = LiveJob(ts, lambda b: "yield", name="ts-waiter")
+
+    def waiter_chunk(budget):
+        if lock.acquire(waiter, timeout=2.0):
+            lock.release(waiter)
+            waiter_done.set()
+            return "done"
+        return "yield"
+    waiter._run_chunk = waiter_chunk
+
+    k.start()
+    k.wake(holder)
+    assert _wait_for(lambda: lock.holder is holder)
+    k.wake(waiter)
+    # the TS job proceeds because the panic force-released the lock
+    assert waiter_done.wait(5.0)
+    assert _wait_for(lambda: holder.quarantined)
+    k.stop()
+
+    assert k.metrics.panics == ["crashy-holder"] * 2    # initial + 1 retry
+    assert k.metrics.retries == 1 and k.metrics.quarantines == 1
+    assert holder.state == JobState.EXITED
+    assert holder.boosted is False and holder.held_locks == set()
+    assert k.hints.waiters == {} and k.hints._boost_reasons == {}
+    assert lock.holder is None and not lock._lock.locked()
+    kinds = _kinds(tracer)
+    assert kinds.count("panic") == 2
+    assert kinds.count("quarantine") == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite 4: drain_slot while a live job is mid-chunk
+# ---------------------------------------------------------------------------
+
+def test_drain_slot_mid_chunk_live():
+    tracer = SchedTracer()
+    k = LiveKernel(2, make_policy("ufs"), tracer=tracer)
+    bg = k.create_group("bg", Tier.BACKGROUND, 100)
+    ran = []
+
+    def chunk(budget):
+        time.sleep(0.02)
+        ran.append(time.monotonic())
+        return "yield"
+    job = LiveJob(bg, chunk, name="migrant")
+
+    k.start()
+    k.wake(job)
+    assert _wait_for(lambda: job.state == JobState.RUNNING)
+    drained = next(s.sid for s in k.slots if s.current is job)
+    k.drain_slot(drained)
+    drain_t = k.now
+    # the job keeps making progress on the surviving slot
+    n_before = len(ran)
+    assert _wait_for(lambda: len(ran) >= n_before + 3)
+    k.stop()
+
+    assert not k.slots[drained].online
+    starts_after = [ev for ev in tracer.events
+                    if ev.kind == "start_job" and ev.t > drain_t]
+    assert starts_after, "job never re-dispatched after the drain"
+    # the drained slot is never re-dispatched; the survivor carries the job
+    assert all(ev.slot != drained for ev in starts_after)
+    assert any(ev.jid == job.jid for ev in starts_after)
+
+
+# ---------------------------------------------------------------------------
+# Fault-free runs: the subsystem must be invisible
+# ---------------------------------------------------------------------------
+
+def test_fault_free_summary_has_no_fault_keys():
+    """Metrics.summary() on a fault-free run is byte-compatible with the
+    pre-fault-path schema (the microbench baseline hashes it exactly)."""
+    from repro.core.workloads import bound_worker, bursty_worker
+    k = SchedKernel(2, make_policy("ufs"), seed=11)
+    ts = k.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = k.create_group("bg", Tier.BACKGROUND, 1)
+    k.add_job(Job(ts, behavior=bursty_worker(1), name="ts0", kind="bursty"))
+    k.add_job(Job(bg, behavior=bound_worker(2, query_cpu=0.05), name="bg0",
+                  kind="bound"))
+    m = k.run(0.5, warmup=0.1)
+    counters = m.summary()["counters"]
+    assert set(counters) == {"preemptions", "kicks", "dispatches",
+                             "lb_migrations", "panics"}
+    assert counters["panics"] == []

@@ -10,6 +10,7 @@ from repro.configs import get_arch
 from repro.core import Tier
 from repro.core.live import LiveJob, LiveKernel, LiveLock
 from repro.core.policies import make_policy
+from repro.core.task import JobState
 from repro.models.transformer import Model
 from repro.serving.engine import InferenceEngine, Request
 
@@ -75,6 +76,100 @@ def test_live_lock_hint_boost():
     kernel.stop()
     assert state["holder_done"] and state["waiter_done"]
     assert kernel.hints.writes > 0
+
+
+class _TinyModel:
+    """Stub model with the engine's contract (init_cache / prefill /
+    decode_step) but no weights: shutdown and deadline tests need the
+    engine mechanics, not a real transformer."""
+
+    vocab = 17
+
+    def init_cache(self, batch, max_len):
+        return {"k": jnp.zeros((batch, max_len), jnp.float32)}
+
+    def _logits(self, batch, t):
+        row = jnp.arange(self.vocab, dtype=jnp.float32)
+        return jnp.tile(row[None, None, :], (batch, t, 1))
+
+    def prefill(self, params, batch, max_len):
+        toks = batch["tokens"]
+        return (self._logits(1, toks.shape[1]),
+                {"k": jnp.zeros((1, max_len), jnp.float32)})
+
+    def decode_step(self, params, caches, toks, pos):
+        return self._logits(toks.shape[0], 1), caches
+
+
+def _tiny_engine(max_batch=2, max_len=64):
+    kernel = LiveKernel(1, make_policy("ufs"))
+    engine = InferenceEngine(_TinyModel(), None, kernel,
+                             max_batch=max_batch, max_len=max_len)
+    return kernel, engine
+
+
+def test_engine_stop_wakes_blocked_decode_loop():
+    """stop() must wake the parked decode loop so it exits; before the fix
+    the loop slept forever and kernel.stop() left a zombie job."""
+    kernel, engine = _tiny_engine()
+    kernel.start()
+    engine.start()
+    # no requests: the first chunk parks the loop
+    assert _wait_for(lambda: engine._job.state == JobState.BLOCKED)
+    engine.stop()
+    assert _wait_for(lambda: engine._job.state == JobState.EXITED), \
+        "decode loop never observed the shutdown"
+    kernel.stop()
+
+
+def test_engine_stop_drains_pending_and_active():
+    """stop(drain=True) fails everything in flight: done_event set,
+    error='shutdown', cache slots back in the pool."""
+    kernel, engine = _tiny_engine(max_batch=2, max_len=4096)
+    kernel.start()
+    engine.start()
+    rng = np.random.default_rng(0)
+    reqs = [engine.submit(Request(
+        prompt=rng.integers(0, 17, 4).astype(np.int32),
+        max_new_tokens=100_000)) for _ in range(3)]
+    # 2 admitted into slots, 1 pending; none can finish before max_len
+    assert _wait_for(lambda: len(engine.active) == 2)
+    engine.stop()
+    for r in reqs:
+        assert r.done_event.wait(timeout=5), "request leaked at shutdown"
+        assert r.error == "shutdown" and not r.ok
+    assert not engine.pending and not engine.active
+    assert sorted(engine.pool.free) == [0, 1]
+    assert _wait_for(lambda: engine._job.state == JobState.EXITED)
+    kernel.stop()
+
+
+def test_engine_request_deadline_fails_and_frees_slot():
+    kernel, engine = _tiny_engine(max_batch=2, max_len=4096)
+    kernel.start()
+    engine.start()
+    rng = np.random.default_rng(0)
+    doomed = engine.submit(Request(
+        prompt=rng.integers(0, 17, 4).astype(np.int32),
+        max_new_tokens=100_000, deadline_s=0.05))
+    assert doomed.done_event.wait(timeout=10), "deadline never enforced"
+    assert doomed.error == "deadline" and not doomed.ok
+    # its cache slot went back to the pool and a fresh request still works
+    ok = engine.submit(Request(
+        prompt=rng.integers(0, 17, 4).astype(np.int32), max_new_tokens=3))
+    assert ok.done_event.wait(timeout=30)
+    assert ok.ok and len(ok.tokens) >= 3
+    engine.stop()
+    kernel.stop()
+
+
+def _wait_for(cond, timeout=5.0, interval=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
 
 
 @pytest.mark.slow
