@@ -132,6 +132,16 @@ class Policy(ABC):
 
     periodic_interval: Optional[float] = None
 
+    def queued_count(self) -> int:
+        """Number of runnable jobs waiting in this policy's queues (local
+        DSQs + group DSQs).  Used by event-driven executors to bound how
+        many parked workers an enqueue wakes.  Policies with private queues
+        (e.g. the RT global fair rq) must override and add them in."""
+        k = self.kernel
+        n = sum(len(s.local_dsq) for s in k.slots if s.online)
+        n += sum(len(g.dsq) for g in k.groups.values() if g.dsq is not None)
+        return n
+
 
 class Executor(ABC):
     """Narrow backend protocol: how the core's decisions are carried out.
@@ -206,6 +216,11 @@ class Executor(ABC):
     def interrupt(self, slot: Slot) -> None:
         """Force the current job off ``slot`` (drain): sim preempts at the
         current event; threads request a chunk-boundary stop."""
+
+    def work_enqueued(self, job: Job) -> None:
+        """A job just entered the policy's queues (wake/requeue).  Called
+        with the mutation guard held.  Event-driven executors use this to
+        arm their guard-exit wake-scan; the sim backend ignores it."""
 
     def slot_added(self, slot: Slot) -> None:
         """A slot joined the pool (elastic scale-up)."""
@@ -300,6 +315,10 @@ class SchedCore:
             if self._traced:
                 self.trace("wake", job=job)
                 self.trace("enqueue", job=job, requeue=False)
+            # Arm *before* enqueue: the policy kicks the chosen slot from
+            # inside enqueue(), and event-driven executors pair each kick
+            # with one armed unit (a serviced enqueue needs no wake-scan).
+            self.executor.work_enqueued(job)
             self.policy.enqueue(job, requeue=False)
 
     def requeue(self, job: Job) -> None:
@@ -308,6 +327,7 @@ class SchedCore:
             job.location = None
             if self._traced:
                 self.trace("enqueue", job=job, requeue=True)
+            self.executor.work_enqueued(job)   # before enqueue: see wake()
             self.policy.enqueue(job, requeue=True)
 
     # ------------------------------------------------------------- kicks

@@ -49,20 +49,49 @@ class LiveJob(Job):
 class ThreadExecutor(Executor):
     """Worker-thread backend: real wall-clock time, chunk-granular dispatch.
 
-    The mutation guard is a condition variable over a re-entrant lock, so
-    hint callbacks and nested lifecycle calls (enqueue -> kick -> ...) are
-    safe from any thread -- including worker threads already inside the
-    guard.  Exiting the guard always notifies idle workers.
+    The mutation guard is a re-entrant lock, so hint callbacks and nested
+    lifecycle calls (enqueue -> kick -> ...) are safe from any thread --
+    including worker threads already inside the guard.
+
+    Two dispatch modes (DESIGN.md section 13):
+
+    * ``"event"`` (default) -- per-slot :class:`threading.Event` parking with
+      targeted wakeups: ``deliver_kick`` wakes only the kicked slot, and idle
+      workers park indefinitely.  Enqueues that bypass the kick path (e.g. a
+      direct enqueue onto a busy slot's DSQ) are covered by a bounded
+      wake-scan on outermost guard exit, armed only when work was actually
+      enqueued (``work_enqueued``), so an idle fleet never spins.
+    * ``"polling"`` -- the legacy global condition variable with a
+      ``wait(timeout=poll_interval)`` tick and ``notify_all`` on every guard
+      exit (thundering herd).  Kept as the serving benchmark's pre-change
+      baseline and as a conservative fallback.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, dispatch: str = "event",
+                 poll_interval: float = 0.05) -> None:
+        if dispatch not in ("event", "polling"):
+            raise ValueError(f"dispatch must be 'event' or 'polling', "
+                             f"got {dispatch!r}")
         self._t0 = time.monotonic()
-        self._cond = threading.Condition()       # default lock is an RLock
+        self._mu = threading.RLock()
+        self._cond = threading.Condition(self._mu)   # polling-mode parking
+        self._dispatch_mode = dispatch
+        self._poll = poll_interval
+        self._depth = 0                          # guard nesting (under _mu)
         self._stop = False
         self._started = False
         self._threads: list = []
         self._timers: list = []
         self._preempt: set[int] = set()          # sids with a pending preempt
+        self._events: dict[int, threading.Event] = {}   # sid -> park event
+        self._parked: set[int] = set()           # sids currently parked
+        self._enq_count = 0                      # enqueues not yet serviced
+                                                 # by a kick or wake-scan
+        self._tl = threading.local()             # worker epilogue marker
+        # Job-state settle watchers (engine shutdown path): its own small
+        # lock so watchers never contend with the scheduling hot path.
+        self._settle = threading.Condition(threading.Lock())
+        self._settle_waiters = 0
 
     # ---------------------------------------------------- Executor protocol
     @property
@@ -73,54 +102,121 @@ class ThreadExecutor(Executor):
         if dt <= 0:
             fn()
             return
-        t = threading.Timer(dt, self._fire_deferred, args=(fn,))
+        handle: list = []
+        t = threading.Timer(dt, self._fire_deferred, args=(fn, handle))
+        handle.append(t)
         t.daemon = True
-        with self._cond:
+        with self._mu:
             if self._stop:
                 return
-            self._timers = [x for x in self._timers if x.is_alive()]
             self._timers.append(t)
         t.start()
 
-    def _fire_deferred(self, fn: Callable[[], None]) -> None:
-        with self._cond:
+    def _fire_deferred(self, fn: Callable[[], None], handle: list) -> None:
+        with self._mu:
+            # Self-prune: a fired timer must not linger in _timers (they
+            # used to accumulate until the next defer() swept them).
+            if handle:
+                try:
+                    self._timers.remove(handle[0])
+                except ValueError:
+                    pass
             if self._stop:
                 return
         fn()
 
     @contextmanager
     def _guard(self):
-        with self._cond:
+        with self._mu:
+            self._depth += 1
             try:
                 yield
             finally:
-                self._cond.notify_all()
+                self._depth -= 1
+                if self._dispatch_mode == "polling":
+                    self._cond.notify_all()
+                elif self._depth == 0 and self._enq_count:
+                    n, self._enq_count = self._enq_count, 0
+                    self._wake_idle_workers(n)
 
     def guard(self) -> ContextManager:
         return self._guard()
 
+    def work_enqueued(self, job) -> None:
+        # Arms the guard-exit wake-scan: only actual enqueues wake parked
+        # workers, so a worker re-parking (also a guard exit) cannot wake
+        # itself in a spin loop.  Each unit is cancelled by the kick that
+        # services it (deliver_kick), so the scan only covers kickless
+        # enqueues -- the safety net, not the common path.
+        self._enq_count += 1
+
+    def _wake_idle_workers(self, n_armed: int) -> None:
+        """Targeted wakeups on outermost guard exit after an enqueue: wake
+        at most as many parked idle workers as there are unserviced
+        enqueues (and never more than the policy has queued) -- no
+        thundering herd, and none at all when the queues are empty.  Caller
+        holds the mutation lock."""
+        if self._stop or not self._parked:
+            return
+        n = min(n_armed, self.core.policy.queued_count())
+        for sid in list(self._parked):
+            if n <= 0:
+                break
+            slot = self.core.slots[sid]
+            if slot.online and slot.current is None:
+                evt = self._events.get(sid)
+                if evt is not None and not evt.is_set():
+                    evt.set()
+                    n -= 1
+
     def deliver_kick(self, slot: Slot, preempt: bool) -> None:
-        with self._cond:
+        with self._mu:
             if preempt and slot.current is not None:
                 self.core.metrics.preemptions += 1
                 self.core.trace("preempt_slot", slot=slot.sid,
                                 job=slot.current)
                 self._preempt.add(slot.sid)
-            self._cond.notify_all()
+            if self._dispatch_mode == "polling":
+                self._cond.notify_all()
+            else:
+                # This kick services one pending enqueue: the kicked slot
+                # either unparks here or rescans at its next chunk
+                # boundary, so the guard-exit wake-scan need not also fire.
+                if self._enq_count:
+                    self._enq_count -= 1
+                if (not preempt and slot.current is None
+                        and getattr(self._tl, "rescan_sid", None) == slot.sid):
+                    # Redundant self-kick: a worker epilogue requeued work
+                    # and the policy kicked the worker's own (momentarily
+                    # idle) slot -- that worker rescans immediately after,
+                    # so setting its event would only cause a futile
+                    # park/unpark cycle on its next idle pass.
+                    return
+                evt = self._events.get(slot.sid)
+                if evt is not None:
+                    evt.set()                    # wake only the kicked slot
 
     def interrupt(self, slot: Slot) -> None:
         # Chunk-granular: the worker stops the job at the chunk boundary and
         # the policy (which only sees online slots) migrates it elsewhere.
-        with self._cond:
+        with self._mu:
             if slot.current is not None:
                 self._preempt.add(slot.sid)
-            self._cond.notify_all()
+            if self._dispatch_mode == "polling":
+                self._cond.notify_all()
+            else:
+                evt = self._events.get(slot.sid)
+                if evt is not None:
+                    evt.set()
 
     def slot_added(self, slot: Slot) -> None:
-        with self._cond:
+        with self._mu:
+            self._events.setdefault(slot.sid, threading.Event())
+            self._reap_threads_locked()
             if self._started and not self._stop:
                 self._spawn_worker(slot)
-            self._cond.notify_all()
+            if self._dispatch_mode == "polling":
+                self._cond.notify_all()
 
     def preempt_requested(self, slot: Slot) -> bool:
         """Chunk-granular preempt poll for long-running chunks."""
@@ -128,9 +224,10 @@ class ThreadExecutor(Executor):
 
     # -------------------------------------------------------------- workers
     def start(self) -> None:
-        with self._cond:
+        with self._mu:
             self._started = True
             for slot in self.core.slots:
+                self._events.setdefault(slot.sid, threading.Event())
                 self._spawn_worker(slot)
 
     def _spawn_worker(self, slot: Slot) -> None:
@@ -138,31 +235,94 @@ class ThreadExecutor(Executor):
         self._threads.append(t)
         t.start()
 
+    def _reap_threads_locked(self) -> None:
+        # Exited workers (stopped executors, drained re-spawns) used to
+        # accumulate here forever and get joined again on every stop.
+        self._threads = [t for t in self._threads if t.is_alive()]
+
     def stop(self) -> None:
-        with self._cond:
+        with self._mu:
             self._stop = True
             for t in self._timers:
                 t.cancel()
+            self._timers.clear()
             self._cond.notify_all()
-        for t in self._threads:
+            for evt in self._events.values():
+                evt.set()                        # unpark everyone to exit
+            threads = list(self._threads)
+        with self._settle:
+            self._settle.notify_all()
+        for t in threads:
             t.join(timeout=5.0)
+        with self._mu:
+            self._reap_threads_locked()
+
+    def wait_job_settle(self, job, states=("blocked", "exited", "new"),
+                        timeout: float = 2.0) -> str:
+        """Block until ``job.state`` settles into one of ``states`` (or the
+        executor stops / ``timeout`` lapses); returns the final state value.
+        Event-driven replacement for busy-polling job state at shutdown:
+        worker epilogues notify after every chunk's state transition."""
+        deadline = time.monotonic() + timeout
+        with self._settle:
+            self._settle_waiters += 1
+            try:
+                while True:
+                    state = job.state.value
+                    if state in states or self._stop:
+                        return state
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return state
+                    self._settle.wait(remaining)
+            finally:
+                self._settle_waiters -= 1
+
+    def _notify_settle(self) -> None:
+        if self._settle_waiters:
+            with self._settle:
+                self._settle.notify_all()
 
     def _worker(self, slot: Slot) -> None:
         core = self.core
+        evt = None
+        with self._mu:
+            evt = self._events.setdefault(slot.sid, threading.Event())
         while True:
-            with self._cond:
-                while True:
-                    if self._stop:
-                        return
-                    if slot.online:
-                        core.schedule_next(slot)     # shared dispatch + start
-                        if slot.current is not None:
-                            break
-                    self._cond.wait(timeout=0.05)
-                job = slot.current
-                self._preempt.discard(slot.sid)
-                budget = slot.slice_budget
-                runner = getattr(job, "_run_chunk", None) or job.run_chunk
+            job = None
+            park = False
+            with self._guard():
+                if self._stop:
+                    return
+                if slot.online:
+                    core.schedule_next(slot)     # shared dispatch + start
+                    job = slot.current
+                if job is None:
+                    if self._dispatch_mode == "polling":
+                        self._cond.wait(timeout=self._poll)
+                    else:
+                        # Clear-then-park under the lock: any kick or
+                        # enqueue serialized after this point re-sets the
+                        # event, so the wait below can never miss a wakeup.
+                        evt.clear()
+                        self._parked.add(slot.sid)
+                        park = True
+                        if core._traced:
+                            core.trace("park", slot=slot.sid)
+                else:
+                    self._preempt.discard(slot.sid)
+                    budget = slot.slice_budget
+                    runner = getattr(job, "_run_chunk", None) or job.run_chunk
+            if job is None:
+                if park:
+                    t_park = time.monotonic()
+                    evt.wait()                   # park until targeted wakeup
+                    waited = time.monotonic() - t_park
+                    with self._mu:
+                        self._parked.discard(slot.sid)
+                    if core._traced:
+                        core.trace("unpark", slot=slot.sid, waited=waited)
+                continue
             t0 = time.monotonic()
             err: Optional[BaseException] = None
             tb = ""
@@ -174,18 +334,26 @@ class ThreadExecutor(Executor):
                 status = "panic"
                 err, tb = e, traceback.format_exc()
             used = time.monotonic() - t0
-            with self._cond:
-                core.stop_job(slot, used, reason=status)  # shared stop bookkeeping
-                self._preempt.discard(slot.sid)
-                if status == "panic":
-                    core.panic_job(job, slot=slot, exc=err, trace_back=tb)
-                elif status == "done":
-                    job.state = JobState.EXITED
-                elif status == "blocked":
-                    job.state = JobState.BLOCKED
-                else:
-                    core.requeue(job)
-                self._cond.notify_all()
+            # Mark the epilogue window (thread-local): a requeue in here
+            # often kicks this worker's own just-idled slot, and this
+            # worker rescans immediately on loop-around, so deliver_kick
+            # can skip setting our park event (see deliver_kick).
+            self._tl.rescan_sid = slot.sid
+            try:
+                with self._guard():
+                    core.stop_job(slot, used, reason=status)  # shared stop bookkeeping
+                    self._preempt.discard(slot.sid)
+                    if status == "panic":
+                        core.panic_job(job, slot=slot, exc=err, trace_back=tb)
+                    elif status == "done":
+                        job.state = JobState.EXITED
+                    elif status == "blocked":
+                        job.state = JobState.BLOCKED
+                    else:
+                        core.requeue(job)
+            finally:
+                self._tl.rescan_sid = None
+            self._notify_settle()
 
 
 class LiveKernel(SchedCore):
@@ -208,7 +376,9 @@ class LiveKernel(SchedCore):
                  kick_latency: float = 0.0,
                  hints_enabled: bool = True,
                  seed: int = 0,
-                 tracer: Optional[SchedTracer] = None):
+                 tracer: Optional[SchedTracer] = None,
+                 dispatch: str = "event",
+                 poll_interval: float = 0.05):
         if legacy:
             if len(legacy) > len(self._LEGACY_POSITIONAL):
                 raise TypeError(
@@ -224,7 +394,9 @@ class LiveKernel(SchedCore):
             hints_enabled = over.get("hints_enabled", hints_enabled)
             kick_latency = over.get("kick_latency", kick_latency)
         del seed                                   # parity-only, no sim RNG
-        super().__init__(n_slots, policy, ThreadExecutor(), hints=hints,
+        executor = ThreadExecutor(dispatch=dispatch,
+                                  poll_interval=poll_interval)
+        super().__init__(n_slots, policy, executor, hints=hints,
                          metrics=metrics, kick_latency=kick_latency,
                          hints_enabled=hints_enabled, tracer=tracer)
 

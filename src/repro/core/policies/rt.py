@@ -57,6 +57,11 @@ class RTPolicy(Policy):
         self.fair_until: dict[int, float] = {}
 
     # ------------------------------------------------------------------
+    def queued_count(self) -> int:
+        # The global fair rq is policy-private state the generic scan
+        # (local + group DSQs) cannot see.
+        return super().queued_count() + len(self.fair_queue)
+
     def _is_rt(self, job: Job) -> bool:
         return job.tier == Tier.TIME_SENSITIVE
 

@@ -68,6 +68,8 @@ EVENT_KINDS = frozenset({
     "panic",           # job faulted (args: reason, error, traceback, retries)
     "retry",           # panic path restarting the job (args: attempt, delay)
     "quarantine",      # retries exhausted: job poisoned to EXITED
+    "park",            # idle worker parked on its per-slot event (live only)
+    "unpark",          # parked worker woken (args: waited)
 })
 
 DEFAULT_CAPACITY = 1 << 16
@@ -412,7 +414,7 @@ def to_chrome_trace(events: list, end: Optional[float] = None) -> dict:
     open_locks: dict = {}
     for ev in events:
         a = ev.args or {}
-        if ev.kind in ("kick", "preempt_slot"):
+        if ev.kind in ("kick", "preempt_slot", "park", "unpark"):
             te.append({"name": ev.kind, "ph": "i", "s": "t",
                        "pid": PID_SLOTS, "tid": ev.slot, "ts": _us(ev.t),
                        "args": {k: v for k, v in a.items()}})

@@ -409,6 +409,33 @@ class Model:
         logits = self._logits(params, x[:, -1:])
         return logits, caches
 
+    def prefill_batch(self, params, batch, smax: int):
+        """Batched ragged prefill for the serving engine's batched
+        admission: one padded forward over B right-padded prompts.
+
+        ``batch``: ``tokens`` (B, S) int32 right-padded, ``lengths`` (B,)
+        int32 true prompt lengths.  Returns ``(logits (B, 1, V), caches)``
+        where row ``i``'s logits are taken at position ``lengths[i]-1``
+        (the last *real* token, not the padded tail).  Cache positions
+        beyond a row's length hold pad-token K/V -- the same contamination
+        class as the pool's zero rows, tolerated because decode attends
+        under a causal mask up to the row's own length.
+        """
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["frames"])
+        (x, _), caches = self._backbone_seq(params, x, positions,
+                                            want_cache=True, smax=smax,
+                                            enc_out=enc_out)
+        last = (batch["lengths"].astype(jnp.int32) - 1)[:, None, None]
+        idx = jnp.broadcast_to(last, (x.shape[0], 1, x.shape[2]))
+        x_last = jnp.take_along_axis(x, idx, axis=1)       # (B, 1, D)
+        logits = self._logits(params, x_last)
+        return logits, caches
+
     # ------------------------------------------------------------- decode
     def decode_step(self, params, caches, token, pos):
         """token: (B, 1) int32; pos: traced scalar; caches from prefill."""

@@ -11,8 +11,58 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
+
 from ..core.base import SchedCore
 from ..core.live import LiveLock
+
+
+def cache_batch_axes(model, max_len: int):
+    """Per-leaf batch-axis map for ``model.init_cache`` pytrees.
+
+    Probes the cache shape at two batch sizes under ``jax.eval_shape`` (no
+    device memory touched) and records, for every leaf, the first axis whose
+    extent tracks the batch size.  Leaves with no batch axis (shared state)
+    get ``-1`` -- a plain int sentinel, because ``None`` is not a pytree
+    leaf and would collapse the tree structure.
+    """
+    a = jax.eval_shape(lambda: model.init_cache(2, max_len))
+    b = jax.eval_shape(lambda: model.init_cache(3, max_len))
+
+    def axis(x, y):
+        for d, (m, n) in enumerate(zip(x.shape, y.shape)):
+            if m != n:
+                return d
+        return -1
+
+    return jax.tree.map(axis, a, b)
+
+
+def make_write_slots(batch_axes):
+    """Build a jitted ``write(pool, rows, slots) -> pool`` scatter that
+    publishes a batch of per-request cache rows into the pooled cache in one
+    fused device program (replacing a per-request ``tree_map`` + host loop).
+
+    ``rows`` is a cache pytree whose batch axis indexes the rows to write
+    and ``slots`` an int32 vector of destination pool rows.  Out-of-range
+    slot indices (use the pool size as the padding sentinel -- *not* -1,
+    which JAX would wrap to the last row) are dropped by ``mode="drop"``, so
+    padded admission batches scatter only their real rows.
+
+    The pool is *not* donated: the engine's overlapped decode keeps
+    references to superseded snapshots (generation-counter discard path),
+    so donation would invalidate buffers still being read.
+    """
+    def write(pool, rows, slots):
+        def one(pool_leaf, rows_leaf, ax):
+            if ax < 0:
+                return pool_leaf
+            idx = (slice(None),) * ax + (slots,)
+            return pool_leaf.at[idx].set(rows_leaf.astype(pool_leaf.dtype),
+                                         mode="drop")
+        return jax.tree.map(one, pool, rows, batch_axes)
+
+    return jax.jit(write)
 
 
 class CacheSlotPool:

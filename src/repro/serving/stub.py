@@ -1,0 +1,105 @@
+"""Deterministic stub model for serving-path benchmarks and tests.
+
+A tiny recurrent model with the engine's full contract (``init_cache`` /
+``prefill`` / ``prefill_batch`` / ``decode_step``): real jittable JAX
+compute, but microseconds per step, so `benchmarks/serving_bench.py` can
+measure *scheduler and engine* overhead (lock hold, wakeup latency,
+admission batching) instead of device FLOPs.
+
+Unlike a KV-cache transformer, the recurrent state makes batched
+right-padded prefill *exactly* equivalent to per-request prefill: the
+padded tail would corrupt a naive final state, so ``prefill_batch`` stacks
+the per-step states and gathers each row's state at ``lengths-1``.  Engine
+greedy decode through this stub is therefore bit-comparable against a
+direct (unscheduled) prefill+decode loop -- the hot-path correctness oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class TinyStubModel:
+    """h' = tanh(h @ Wh + embed[token]); logits = h' @ Wout."""
+
+    def __init__(self, d_model: int = 32, vocab: int = 32, depth: int = 1,
+                 seed: int = 0):
+        self.d_model = d_model
+        self.vocab = vocab
+        self.depth = depth            # extra tanh-matmul rounds per step
+        # Pre-jitted internals: the engine calls prefill/decode eagerly on
+        # some paths, and an un-jitted lax.scan over a per-call closure
+        # recompiles on every invocation -- hundreds of ms that would
+        # swamp the scheduler overhead this stub exists to expose.
+        self._jit_prefill = jax.jit(self._prefill_impl)
+        self._jit_prefill_batch = jax.jit(self._prefill_batch_impl)
+        self._jit_decode = jax.jit(self._decode_impl)
+
+    def init_params(self, seed: int = 0):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        s = 1.0 / jnp.sqrt(self.d_model)
+        return {
+            "emb": jax.random.normal(k1, (self.vocab, self.d_model)) * s,
+            "wh": jax.random.normal(k2, (self.d_model, self.d_model)) * s,
+            "wout": jax.random.normal(k3, (self.d_model, self.vocab)) * s,
+        }
+
+    # ------------------------------------------------------------- contract
+    def init_cache(self, batch_size: int, smax: int, dtype=None):
+        del smax
+        dt = jnp.dtype(dtype or jnp.float32)
+        return {"h": jnp.zeros((batch_size, self.d_model), dt)}
+
+    def _step(self, params, h, tok):
+        """One recurrent update; tok: (B,) int32, h: (B, D)."""
+        h = jnp.tanh(h @ params["wh"] + params["emb"][tok])
+        for _ in range(self.depth - 1):
+            h = jnp.tanh(h @ params["wh"])
+        return h
+
+    def _prefill_impl(self, params, toks):
+        h0 = jnp.zeros((toks.shape[0], self.d_model), jnp.float32)
+
+        def body(h, tok):
+            h = self._step(params, h, tok)
+            return h, None
+
+        h, _ = jax.lax.scan(body, h0, toks.T)
+        logits = (h @ params["wout"])[:, None, :]
+        return logits, {"h": h}
+
+    def prefill(self, params, batch, smax: int):
+        """tokens (1, S) -> logits (1, 1, V), cache {"h": (1, D)}."""
+        del smax
+        return self._jit_prefill(params, batch["tokens"])
+
+    def _prefill_batch_impl(self, params, toks, lengths):
+        h0 = jnp.zeros((toks.shape[0], self.d_model), jnp.float32)
+
+        def body(h, tok):
+            h = self._step(params, h, tok)
+            return h, h
+
+        _, hs = jax.lax.scan(body, h0, toks.T)        # (S, B, D)
+        idx = (lengths.astype(jnp.int32) - 1)[None, :, None]
+        idx = jnp.broadcast_to(idx, (1, hs.shape[1], hs.shape[2]))
+        h = jnp.take_along_axis(hs, idx, axis=0)[0]   # (B, D)
+        logits = (h @ params["wout"])[:, None, :]
+        return logits, {"h": h}
+
+    def prefill_batch(self, params, batch, smax: int):
+        """tokens (B, S) right-padded + lengths (B,) -> logits (B, 1, V),
+        cache {"h": (B, D)} taken at each row's last *real* token, so
+        padding is exact (see module docstring)."""
+        del smax
+        return self._jit_prefill_batch(params, batch["tokens"],
+                                       batch["lengths"])
+
+    def _decode_impl(self, params, caches, token):
+        h = self._step(params, caches["h"], token[:, 0])
+        return (h @ params["wout"])[:, None, :], {"h": h}
+
+    def decode_step(self, params, caches, token, pos):
+        """token (B, 1) int32; returns logits (B, 1, V) and new cache."""
+        del pos
+        return self._jit_decode(params, caches, token)

@@ -1,0 +1,357 @@
+"""Serving hot path: overlapped decode, batched admission, event dispatch.
+
+Covers the PR-10 overhaul: the generation-counter snapshot/merge decode,
+batched admission prefill (padding exactness on the stub model), bulk
+prefill vs decode under slot exhaustion, drain racing an in-flight bulk
+prefill, the event-driven ThreadExecutor (park/unpark, settle wait, thread
+reaping, timer pruning) and the legacy compatibility modes the serving
+benchmark uses as its baseline.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Tier
+from repro.core.live import LiveJob, LiveKernel
+from repro.core.policies import make_policy
+from repro.core.task import JobState
+from repro.core.trace import SchedTracer, validate_events, wakeup_delays
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.kv_cache import cache_batch_axes, make_write_slots
+from repro.serving.stub import TinyStubModel
+
+
+def _wait_for(cond, timeout=5.0, dt=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(dt)
+    return cond()
+
+
+def _stub_engine(max_batch=4, max_len=64, n_slots=2, **engine_kw):
+    model = TinyStubModel()
+    params = model.init_params(0)
+    kernel = LiveKernel(n_slots, make_policy("ufs"),
+                        **engine_kw.pop("kernel_kw", {}))
+    engine = InferenceEngine(model, params, kernel,
+                             max_batch=max_batch, max_len=max_len,
+                             **engine_kw)
+    return model, params, kernel, engine
+
+
+def _direct_greedy(model, params, prompt, n_tokens, max_len=64):
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}, max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(toks) < n_tokens:
+        lg, caches = model.decode_step(
+            params, caches, jnp.asarray([[toks[-1]]], jnp.int32), pos)
+        toks.append(int(jnp.argmax(lg[0, 0])))
+        pos += 1
+    return toks
+
+
+# --------------------------------------------------------- model-level exact
+def test_stub_batched_prefill_matches_single():
+    """Right-padded batched prefill must equal per-request prefill exactly:
+    the stub gathers each row's recurrent state at lengths-1, so the padded
+    tail never touches it."""
+    model = TinyStubModel()
+    params = model.init_params(3)
+    prompts = [np.arange(1, 1 + n, dtype=np.int32) for n in (3, 5, 2)]
+    L = 8
+    toks = np.zeros((3, L), np.int32)
+    lengths = np.zeros((3,), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+        lengths[i] = len(p)
+    blogits, bcache = model.prefill_batch(
+        params, {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray(lengths)}, 64)
+    for i, p in enumerate(prompts):
+        slogits, scache = model.prefill(
+            params, {"tokens": jnp.asarray(p[None, :])}, 64)
+        np.testing.assert_allclose(np.asarray(blogits[i, 0]),
+                                   np.asarray(slogits[0, -1]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(bcache["h"][i]),
+                                   np.asarray(scache["h"][0]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_write_slots_drops_sentinel_rows():
+    """Out-of-range slot indices (the padding sentinel = pool size) must be
+    dropped, not wrapped: -1 would silently clobber the last pool row."""
+    model = TinyStubModel(d_model=4)
+    axes = cache_batch_axes(model, 16)
+    write = make_write_slots(axes)
+    pool = {"h": jnp.zeros((4, 4), jnp.float32)}
+    rows = {"h": jnp.ones((2, 4), jnp.float32)}
+    out = write(pool, rows, jnp.asarray([1, 4], jnp.int32))
+    got = np.asarray(out["h"])
+    assert got[1].tolist() == [1.0] * 4
+    for r in (0, 2, 3):
+        assert got[r].tolist() == [0.0] * 4, f"row {r} clobbered by sentinel"
+
+
+# ------------------------------------------------------- engine end-to-end
+def test_hotpath_engine_matches_direct_decode():
+    """Overlapped decode + batched admission produce the same greedy tokens
+    as a direct unscheduled prefill+decode loop, across a ragged batch."""
+    model, params, kernel, engine = _stub_engine(max_batch=4)
+    kernel.start()
+    engine.start()
+    prompts = [np.arange(1, 1 + n, dtype=np.int32) for n in (4, 7, 2)]
+    reqs = [engine.submit(Request(prompt=p, max_new_tokens=6))
+            for p in prompts]
+    for r in reqs:
+        assert r.done_event.wait(timeout=30)
+        assert r.ok
+    engine.stop()
+    kernel.stop()
+    for p, r in zip(prompts, reqs):
+        assert r.tokens == _direct_greedy(model, params, p, 6)
+    assert engine.stats.decode_steps > 0
+    assert engine.stats.batched_admissions >= 1
+
+
+def test_legacy_modes_still_serve():
+    """The baseline flags (lock across compute, per-request admission,
+    polling dispatch) must keep producing correct tokens -- the serving
+    benchmark records them as its pre-change reference."""
+    model, params, kernel, engine = _stub_engine(
+        max_batch=2, overlap_decode=False, batched_admission=False,
+        kernel_kw={"dispatch": "polling"})
+    kernel.start()
+    engine.start()
+    p = np.arange(1, 6, dtype=np.int32)
+    r = engine.submit(Request(prompt=p, max_new_tokens=5))
+    assert r.done_event.wait(timeout=30) and r.ok
+    engine.stop()
+    kernel.stop()
+    assert r.tokens == _direct_greedy(model, params, p, 5)
+
+
+def test_decode_snapshot_invalidated_by_concurrent_publish():
+    """If the generation counter moves between snapshot and merge, the
+    decode step must be discarded (not committed over the newer rows) and
+    retried -- tokens stay correct and the discard is counted."""
+    model, params, kernel, engine = _stub_engine(max_batch=2)
+    orig = engine._decode
+    fired = []
+
+    def bump_after_decode(prms, caches, toks, pos):
+        out = orig(prms, caches, toks, pos)
+        if not fired:
+            fired.append(1)
+            with engine._lock:          # simulate a concurrent row publish
+                engine._gen += 1
+        return out
+
+    engine._decode = bump_after_decode
+    kernel.start()
+    engine.start()
+    p = np.arange(1, 5, dtype=np.int32)
+    r = engine.submit(Request(prompt=p, max_new_tokens=5))
+    assert r.done_event.wait(timeout=30) and r.ok
+    engine.stop()
+    kernel.stop()
+    assert engine.stats.decode_invalidations == 1
+    assert r.tokens == _direct_greedy(model, params, p, 5)
+
+
+def test_bulk_prefill_vs_decode_under_slot_exhaustion():
+    """More bulk requests than cache slots: prefill jobs yield until decode
+    frees a slot; everyone completes and the pool drains back to full."""
+    model, params, kernel, engine = _stub_engine(max_batch=2)
+    kernel.start()
+    engine.start()
+    reqs = [engine.submit(Request(prompt=np.arange(1, 4, dtype=np.int32),
+                                  tier="background", max_new_tokens=4))
+            for _ in range(5)]
+    for r in reqs:
+        assert r.done_event.wait(timeout=30), "bulk request starved"
+        assert r.ok, r.error
+    engine.stop()
+    kernel.stop()
+    assert sorted(engine.pool.free) == [0, 1]
+    assert engine.stats.bulk_prefills == 5
+    expect = _direct_greedy(model, params, np.arange(1, 4, dtype=np.int32), 4)
+    for r in reqs:
+        assert r.tokens == expect
+
+
+def test_stop_drain_fails_inflight_bulk():
+    """A background submit() whose prefill has not landed a slot used to be
+    invisible to stop(drain=True): its done_event waiter hung until
+    deadline.  It must now fail with error='shutdown' immediately."""
+    model, params, kernel, engine = _stub_engine(max_batch=1, max_len=4096)
+    kernel.start()
+    engine.start()
+    # occupy the only slot with a request that cannot finish soon
+    blocker = engine.submit(Request(prompt=np.arange(1, 4, dtype=np.int32),
+                                    max_new_tokens=100_000))
+    assert _wait_for(lambda: len(engine.active) == 1)
+    bulk = engine.submit(Request(prompt=np.arange(1, 4, dtype=np.int32),
+                                 tier="background", max_new_tokens=4))
+    assert _wait_for(lambda: bulk.rid in engine._inflight_bulk)
+    engine.stop()
+    assert bulk.done_event.wait(timeout=5), "in-flight bulk leaked at drain"
+    assert bulk.error == "shutdown" and not bulk.ok
+    assert blocker.done_event.wait(timeout=5)
+    assert blocker.error == "shutdown"
+    assert _wait_for(lambda: sorted(engine.pool.free) == [0])
+    kernel.stop()
+
+
+def test_stop_drain_races_midflight_bulk_prefill():
+    """Drain while a bulk prefill is mid-compute with a slot reserved: the
+    merge step must observe the failure, skip activation and hand the slot
+    back (fail-then-merge leaks the slot otherwise)."""
+
+    class SlowPrefill(TinyStubModel):
+        def prefill(self, params, batch, smax):
+            time.sleep(0.3)              # hold the reserved slot a while
+            return super().prefill(params, batch, smax)
+
+    model = SlowPrefill()
+    params = model.init_params(0)
+    kernel = LiveKernel(2, make_policy("ufs"))
+    engine = InferenceEngine(model, params, kernel, max_batch=1, max_len=64)
+    kernel.start()
+    engine.start()
+    bulk = engine.submit(Request(prompt=np.arange(1, 4, dtype=np.int32),
+                                 tier="background", max_new_tokens=4))
+    # wait until the prefill job has reserved the slot (pool empty)
+    assert _wait_for(lambda: not engine.pool.free, timeout=5)
+    engine.stop()                        # drain while prefill is sleeping
+    assert bulk.done_event.wait(timeout=5)
+    assert bulk.error == "shutdown"
+    assert _wait_for(lambda: sorted(engine.pool.free) == [0]), \
+        "reserved slot leaked when drain raced the bulk merge"
+    assert not engine.active
+    kernel.stop()
+
+
+def test_deadline_expires_inflight_bulk():
+    """Deadline expiry must reach bulk requests still waiting for a slot
+    (they are in no queue the old expire scan could see)."""
+    model, params, kernel, engine = _stub_engine(max_batch=1, max_len=4096)
+    kernel.start()
+    engine.start()
+    blocker = engine.submit(Request(prompt=np.arange(1, 4, dtype=np.int32),
+                                    max_new_tokens=100_000))
+    assert _wait_for(lambda: len(engine.active) == 1)
+    bulk = engine.submit(Request(prompt=np.arange(1, 4, dtype=np.int32),
+                                 tier="background", deadline_s=0.2,
+                                 max_new_tokens=4))
+    assert bulk.done_event.wait(timeout=10), "expired bulk request leaked"
+    assert bulk.error == "deadline"
+    engine.stop()
+    kernel.stop()
+    assert blocker.done_event.wait(timeout=5)   # shut down (or finished)
+
+
+# ------------------------------------------------------- executor internals
+def test_wait_job_settle_event_driven():
+    """wait_job_settle returns as soon as the job parks, without polling."""
+    kernel = LiveKernel(1, make_policy("ufs"))
+    ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    n = {"chunks": 0}
+
+    def chunk(budget):
+        n["chunks"] += 1
+        time.sleep(0.005)
+        return "yield" if n["chunks"] < 3 else "blocked"
+
+    job = LiveJob(ts, chunk, name="settle-me")
+    kernel.start()
+    kernel.wake(job)
+    t0 = time.monotonic()
+    state = kernel.executor.wait_job_settle(job, timeout=5.0)
+    assert state == "blocked"
+    assert time.monotonic() - t0 < 2.0
+    assert job.state == JobState.BLOCKED
+    kernel.stop()
+
+
+def test_executor_reaps_threads_and_prunes_timers():
+    kernel = LiveKernel(1, make_policy("ufs"))
+    ex = kernel.executor
+    kernel.start()
+    fired = []
+    ex.defer(0.01, lambda: fired.append(1))
+    assert _wait_for(lambda: fired and not ex._timers), \
+        "fired timer must self-prune from _timers"
+    kernel.add_slot()
+    assert len([t for t in ex._threads if t.is_alive()]) == 2
+    kernel.stop()
+    # stop joins + reaps; a later slot_added on a stopped executor must not
+    # resurrect dead threads in the list
+    assert all(not t.is_alive() for t in ex._threads) or not ex._threads
+    kernel2 = LiveKernel(1, make_policy("ufs"))
+    ex2 = kernel2.executor
+    kernel2.start()
+    for _ in range(3):
+        kernel2.add_slot()
+    alive = sum(t.is_alive() for t in ex2._threads)
+    assert len(ex2._threads) == alive == 4, "dead threads accumulated"
+    kernel2.stop()
+
+
+def test_event_dispatch_parks_and_unparks():
+    """Idle workers park on their per-slot event and are woken by targeted
+    kicks; the park/unpark pair is traced and the stream stays valid."""
+    tracer = SchedTracer(capacity=4096)
+    kernel = LiveKernel(2, make_policy("ufs"), tracer=tracer)
+    ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    kernel.start()
+    time.sleep(0.1)                      # both workers park
+    job = LiveJob(ts, lambda b: "done", name="one-shot")
+    kernel.wake(job)
+    assert _wait_for(lambda: job.state == JobState.EXITED)
+    kernel.stop()
+    events = tracer.events
+    kinds = {e.kind for e in events}
+    assert "park" in kinds and "unpark" in kinds
+    validate_events(events)
+    # the wakeup-delay analysis sees the wake -> start_job edge
+    delays = wakeup_delays(events)
+    assert delays and all(d >= 0 for ds in delays.values() for d in ds)
+
+
+def test_idle_event_workers_do_not_spin():
+    """Parked workers must stay parked while the kernel is idle: the
+    guard-exit wake-scan only fires after an enqueue, so an idle fleet
+    emits no unpark churn."""
+    tracer = SchedTracer(capacity=4096)
+    kernel = LiveKernel(2, make_policy("ufs"), tracer=tracer)
+    kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    kernel.start()
+    time.sleep(0.2)                      # settle: both park once
+    before = sum(1 for e in tracer.events if e.kind == "unpark")
+    time.sleep(0.3)                      # idle window
+    after = sum(1 for e in tracer.events if e.kind == "unpark")
+    kernel.stop()
+    spins = after - before
+    assert spins == 0, f"idle workers unparked {spins} times"
+
+
+def test_queued_count_sees_policy_private_queues():
+    """RT's global fair runqueue is policy-private; queued_count must
+    include it or event dispatch under-wakes."""
+    kernel = LiveKernel(1, make_policy("fifo"))   # never started: jobs queue
+    ts = kernel.create_group("ts", Tier.TIME_SENSITIVE, 10_000)
+    bg = kernel.create_group("bg", Tier.BACKGROUND, 100)
+    kernel.wake(LiveJob(ts, lambda b: "done", name="rt1"))
+    kernel.wake(LiveJob(bg, lambda b: "done", name="fair1"))
+    kernel.wake(LiveJob(bg, lambda b: "done", name="fair2"))
+    with kernel.executor.guard():
+        assert kernel.policy.queued_count() == 3
+    kernel.stop()
